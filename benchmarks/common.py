@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+import time
+
+import numpy as np
+
+
+def emit(name: str, rows, header):
+    """Print a small CSV block for one benchmark (one per paper figure)."""
+    print(f"\n## {name}")
+    print(",".join(header))
+    for row in rows:
+        print(",".join(f"{v:.6g}" if isinstance(v, float) else str(v)
+                       for v in row))
+
+
+def time_call(fn, *args, repeats: int = 5, warmup: int = 2):
+    """Median wall time of fn(*args) (jax results block_until_ready'd)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

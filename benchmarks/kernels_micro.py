@@ -1,0 +1,39 @@
+"""Microbenchmark: staged-transform application cost vs stage count and
+width — the per-kernel table backing the TPU kernel design (VMEM-resident
+stage tables; batch-tiled).  Pallas kernels run in interpret mode here, so
+wall-times are for the XLA path only; the Pallas numbers on real TPU come
+from the same staged tables."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import approximate_symmetric, pack_g
+from repro.kernels import ops
+from .common import emit, time_call
+
+
+def run(fast: bool = False):
+    rows = []
+    sizes = ((64, 64),) if fast else ((64, 64), (128, 128), (256, 64))
+    for n, batch in sizes:
+        x = np.random.default_rng(0).standard_normal((n, n)).astype(
+            np.float32)
+        s = jnp.asarray(x + x.T)
+        for alpha in (1.0, 4.0):
+            g = int(alpha * n * np.log2(n))
+            f, _, _ = approximate_symmetric(s, g=g, n_iter=0)
+            staged = pack_g(f)
+            xb = jnp.asarray(np.random.default_rng(1).standard_normal(
+                (batch, n)).astype(np.float32))
+            fn = jax.jit(lambda st, v: ops.g_apply(st, v, backend="xla"))
+            t = time_call(fn, staged, xb)
+            rows.append([n, batch, alpha, g, staged.num_stages,
+                         t * 1e6, 6 * g * batch / max(t, 1e-12) / 1e9])
+    emit("kernels_micro (staged G apply, XLA path)",
+         rows, ["n", "batch", "alpha", "g", "stages", "us_per_call",
+                "gflops_effective"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

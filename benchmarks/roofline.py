@@ -1,0 +1,42 @@
+"""Roofline report: reads results/dryrun/*.json (produced by
+repro.launch.dryrun) and emits the per-(arch x shape x mesh) three-term
+table for EXPERIMENTS.md §Roofline."""
+import glob
+import json
+import os
+import pathlib
+
+from .common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(fast: bool = False):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        d = json.load(open(f))
+        if d.get("overrides"):
+            continue  # perf-experiment variants tabulated in §Perf
+        r = d["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        rows.append([
+            d["arch"], d["shape"], d["mesh"],
+            f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+            f"{r['collective_s']:.3e}", r["dominant"],
+            f"{d['hbm_gb_per_chip']:.2f}",
+            f"{d['useful_flop_frac']:.3f}",
+            f"{r['compute_s'] / max(total, 1e-30):.3f}",
+        ])
+    if not rows:
+        print("## roofline: no dry-run results found (run "
+              "python -m repro.launch.dryrun --all first)")
+        return []
+    emit("roofline (terms in seconds/step; useful = MODEL_FLOPS/HLO_FLOPS)",
+         rows, ["arch", "shape", "mesh", "compute_s", "memory_s",
+                "collective_s", "dominant", "hbm_gb_chip", "useful_frac",
+                "roofline_frac"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig1,fig5]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from . import (fig1_graph_accuracy, fig2_fgft_comparison, fig4_vs_directU,
+               fig5_random_matrices, fig6_speedup, kernels_micro, roofline)
+
+BENCHES = {
+    "fig1": fig1_graph_accuracy.run,
+    "fig2_fig3": fig2_fgft_comparison.run,
+    "fig4": fig4_vs_directU.run,
+    "fig5": fig5_random_matrices.run,
+    "fig6": fig6_speedup.run,
+    "kernels": kernels_micro.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes/seeds for smoke runs")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benches")
+    args = ap.parse_args(argv)
+    only = set(filter(None, args.only.split(",")))
+    failures = 0
+    for name, fn in BENCHES.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(fast=args.fast)
+            print(f"[{name} done in {time.time() - t0:.1f}s]")
+        except Exception:  # noqa: BLE001 — report all benches
+            failures += 1
+            print(f"[{name} FAILED]")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""The paper's application end-to-end: build fast GFTs for all three
+synthetic graph families (+ a real-graph stand-in), compare against
+truncated Jacobi, and run spectral filtering through the staged kernels.
+
+  PYTHONPATH=src python examples/fgft_graph.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (build_fgft, laplacian, relative_error,
+                        truncated_jacobi, g_objective)
+from repro.graphs import (community_graph, erdos_renyi, sensor_graph,
+                          real_graph_standin)
+
+
+def main():
+    n = 96
+    alpha = 2
+    g = int(alpha * n * np.log2(n))
+    print(f"n={n}, g = {alpha} * n log2 n = {g}\n")
+    print(f"{'graph':12s} {'proposed':>10s} {'jacobi':>10s} {'stages':>7s}")
+    for name, gen in (("community", community_graph),
+                      ("erdos", lambda n, seed: erdos_renyi(n, 0.3, seed)),
+                      ("sensor", sensor_graph)):
+        lap = laplacian(gen(n, seed=0))
+        s = jnp.asarray(lap)
+        den = float((lap * lap).sum())
+        fgft = build_fgft(s, g, directed=False, n_iter=3)
+        fj, sj = truncated_jacobi(s, g=g)
+        ej = float(g_objective(s, fj, sj)) / den
+        print(f"{name:12s} {relative_error(s, fgft):10.5f} {ej:10.5f} "
+              f"{fgft.fwd.num_stages:7d}")
+
+    # real-graph stand-in (subsampled for CPU)
+    adj = real_graph_standin("email")[:192, :192]
+    lap = laplacian(adj)
+    s = jnp.asarray(lap)
+    fgft = build_fgft(s, int(2 * 192 * np.log2(192)), directed=False,
+                      n_iter=3)
+    print(f"{'email[:192]':12s} {relative_error(s, fgft):10.5f}")
+
+    # spectral filtering demo: denoise a piecewise-constant signal
+    rng = np.random.default_rng(3)
+    lap = laplacian(community_graph(n, seed=5))
+    fgft = build_fgft(jnp.asarray(lap), g, directed=False, n_iter=3)
+    base = (rng.integers(0, 2, n) * 2.0 - 1.0).astype(np.float32)
+    noisy = base + 0.5 * rng.standard_normal(n).astype(np.float32)
+    denoised = fgft.filter(jnp.asarray(noisy[None]),
+                           lambda lam: 1.0 / (1.0 + 2.0 * lam))[0]
+    err_before = float(((noisy - base) ** 2).mean())
+    err_after = float(((np.asarray(denoised) - base) ** 2).mean())
+    print(f"\nlow-pass denoising MSE: {err_before:.3f} -> {err_after:.3f} "
+          f"(O(n log n) filter via staged kernels)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family model for a few
+hundred steps on the synthetic pipeline, with checkpointing and optional
+butterfly gradient compression (the paper's operator as a distributed-
+optimization feature).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--compress]
+
+This is the CPU-scale version of ``python -m repro.launch.train``; the
+same code path drives the production mesh.
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.launch import train as train_mod
+from repro.models import transformer as tfm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--compress", action="store_true",
+                    help="butterfly EF gradient compression (ratio 0.25)")
+    args = ap.parse_args()
+
+    # ~100M params: 8 layers, d_model 512, vocab 32k (qwen2 family)
+    import repro.configs.qwen2_1_5b as q
+    cfg = q.CONFIG.replace(n_layers=8, d_model=512, n_heads=8, n_kv_heads=2,
+                           head_dim=64, d_ff=1536, vocab=32768,
+                           attn_chunk=256)
+    import jax
+    params, _ = tfm.init_params(cfg, jax.random.PRNGKey(0), abstract=True)
+    n_params = sum(int(__import__("numpy").prod(p.shape))
+                   for p in jax.tree.leaves(params))
+    print(f"model: {n_params / 1e6:.1f}M params")
+
+    argv = ["--arch", "qwen2-1.5b", "--steps", str(args.steps),
+            "--seq-len", "256", "--global-batch", "8",
+            "--ckpt-every", "100", "--log-every", "20",
+            "--peak-lr", "1e-3"]
+    if args.compress:
+        argv += ["--grad-compress-ratio", "0.25"]
+
+    # drive the real launcher but with the 100M config injected
+    import repro.configs.registry as reg
+    orig = reg.get_config
+    reg.get_config = lambda name, smoke=False: cfg
+    try:
+        final_loss = train_mod.main(argv)
+    finally:
+        reg.get_config = orig
+    print(f"final loss {final_loss:.4f} (random-token floor would be "
+          f"{__import__('numpy').log(cfg.vocab):.2f}; the synthetic stream "
+          "is 2/3 learnable patterns)")
+
+
+if __name__ == "__main__":
+    main()

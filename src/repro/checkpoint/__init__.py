@@ -1,0 +1,2 @@
+from .store import (CheckpointManager, save_checkpoint, restore_checkpoint,
+                    latest_step)

@@ -1,0 +1,141 @@
+"""Baselines the paper compares against (§5, Figures 2, 4, 5).
+
+* ``truncated_jacobi`` — [Le Magoarou et al. 2018]: greedy Jacobi with the
+  largest-|off-diagonal| pair selection, Givens rotations only, no
+  eigenvalue information (Remark 1 of the paper).
+* ``factorize_orthonormal`` — [Rusu & Rosasco 2019]-style greedy Givens
+  factorization of an *explicitly known* orthonormal matrix (used by the
+  paper's Figure 4 comparison; also the building block we reuse for the
+  polar-form compression of LM projection weights).
+* ``rank_r_*`` — truncated eigendecomposition / SVD at matched matvec FLOPs
+  (Figure 5's black curves).
+
+Kondor et al.'s full multiresolution (MMF) hierarchy is out of scope; the
+paper's own Figure 2 shows it dominated by Jacobi-style greedy methods on
+these metrics (noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .gtransform import _conjugate_gt  # shared 2x2 conjugation helper
+from .types import GFactors, gfactors_identity
+
+_NEG_INF = -jnp.inf
+
+
+# ---------------------------------------------------------------------------
+# Truncated Jacobi [Le Magoarou et al. 2018]
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _jacobi_step(s_work):
+    n = s_work.shape[0]
+    absoff = jnp.where(jnp.eye(n, dtype=bool), _NEG_INF, jnp.abs(s_work))
+    flat = jnp.argmax(absoff)
+    p, q = flat // n, flat % n
+    i = jnp.minimum(p, q).astype(jnp.int32)
+    j = jnp.maximum(p, q).astype(jnp.int32)
+    theta = 0.5 * jnp.arctan2(2.0 * s_work[i, j], s_work[i, i] - s_work[j, j])
+    c = jnp.cos(theta)
+    s = -jnp.sin(theta)  # canonical (c, s, +1) encodes V with V^T S V diag
+    sigma = jnp.ones((), s_work.dtype)
+    s_work = _conjugate_gt(s_work, i, j, c, s, sigma)
+    return s_work, (i, j, c, s, sigma)
+
+
+def truncated_jacobi(s_mat: jnp.ndarray, g: int
+                     ) -> Tuple[GFactors, jnp.ndarray]:
+    """Greedy Jacobi truncated at g rotations. Returns (factors, spectrum)."""
+    f0 = gfactors_identity(g, s_mat.dtype)
+
+    def body(t, carry):
+        s_work, fi, fj, fc, fs, fsg = carry
+        s_work, (i, j, c, s, sg) = _jacobi_step(s_work)
+        slot = g - 1 - t
+        return (s_work, fi.at[slot].set(i), fj.at[slot].set(j),
+                fc.at[slot].set(c), fs.at[slot].set(s),
+                fsg.at[slot].set(sg))
+
+    s_work, fi, fj, fc, fs, fsg = lax.fori_loop(
+        0, g, body, (s_mat, f0.i, f0.j, f0.c, f0.s, f0.sigma))
+    return GFactors(fi, fj, fc, fs, fsg), jnp.diagonal(s_work)
+
+
+# ---------------------------------------------------------------------------
+# Greedy Givens factorization of a known orthonormal matrix
+# [Rusu & Rosasco 2019 / Shalit & Chechik 2014 family]
+# ---------------------------------------------------------------------------
+
+def _polar_gains_full(w):
+    """gain_pq of appending the optimal G at pair (p, q):
+    max orthogonal-G tr(G^T W_block) - current trace = (sigma1+sigma2) - tr."""
+    d = jnp.diagonal(w)
+    tr2 = d[:, None] + d[None, :]
+    hr = jnp.sqrt(tr2 ** 2 + (w - w.T) ** 2)          # rotation branch
+    hf = jnp.sqrt((d[:, None] - d[None, :]) ** 2 + (w + w.T) ** 2)
+    gain = jnp.maximum(hr, hf) - tr2
+    n = w.shape[0]
+    return jnp.where(jnp.eye(n, dtype=bool), _NEG_INF, gain)
+
+
+def factorize_orthonormal(u_mat: jnp.ndarray, g: int) -> GFactors:
+    """Greedily factor a known orthonormal U into g extended Givens
+    transforms minimizing ||U - Ubar||_F (via trace maximization)."""
+    f0 = gfactors_identity(g, u_mat.dtype)
+
+    def body(t, carry):
+        w, fi, fj, fc, fs, fsg = carry
+        gains = _polar_gains_full(w)
+        flat = jnp.argmax(gains)
+        p, q = flat // w.shape[0], flat % w.shape[0]
+        i = jnp.minimum(p, q).astype(jnp.int32)
+        j = jnp.maximum(p, q).astype(jnp.int32)
+        m11, m12, m21, m22 = w[i, i], w[i, j], w[j, i], w[j, j]
+        hr = jnp.sqrt((m11 + m22) ** 2 + (m12 - m21) ** 2)
+        hf = jnp.sqrt((m11 - m22) ** 2 + (m12 + m21) ** 2)
+        use_rot = hr >= hf
+        phi_r = jnp.arctan2(m12 - m21, m11 + m22)
+        phi_f = jnp.arctan2(m12 + m21, m11 - m22)
+        c = jnp.where(use_rot, jnp.cos(phi_r), jnp.cos(phi_f))
+        s = jnp.where(use_rot, jnp.sin(phi_r), jnp.sin(phi_f))
+        sg = jnp.where(use_rot, 1.0, -1.0).astype(w.dtype)
+        # W <- G^T W (rows i, j by G^T = [[c, -sg*s], [s, sg*c]])
+        ri, rj = w[i], w[j]
+        w = w.at[i].set(c * ri - sg * s * rj)
+        w = w.at[j].set(s * ri + sg * c * rj)
+        # factor appended on the *inner* side (Ubar_new = Ubar_old @ G), so
+        # discovery order is outermost-first: slot g-1-t in application order
+        slot = g - 1 - t
+        return (w, fi.at[slot].set(i), fj.at[slot].set(j),
+                fc.at[slot].set(c), fs.at[slot].set(s),
+                fsg.at[slot].set(sg))
+
+    w0 = u_mat
+    _, fi, fj, fc, fs, fsg = lax.fori_loop(
+        0, g, body, (w0, f0.i, f0.j, f0.c, f0.s, f0.sigma))
+    return GFactors(fi, fj, fc, fs, fsg)
+
+
+# ---------------------------------------------------------------------------
+# Rank-r baselines (Figure 5's black curves)
+# ---------------------------------------------------------------------------
+
+def rank_r_symmetric(s_mat: jnp.ndarray, r: int):
+    """Best rank-r symmetric approx; returns (approx, flops_per_matvec)."""
+    vals, vecs = jnp.linalg.eigh(s_mat)
+    order = jnp.argsort(-jnp.abs(vals))
+    keep = order[:r]
+    v = vecs[:, keep]
+    approx = (v * vals[keep][None, :]) @ v.T
+    return approx, 2 * 2 * r * s_mat.shape[0]
+
+
+def rank_r_general(c_mat: jnp.ndarray, r: int):
+    u, sv, vt = jnp.linalg.svd(c_mat, full_matrices=False)
+    approx = (u[:, :r] * sv[:r][None, :]) @ vt[:r]
+    return approx, 2 * 2 * r * c_mat.shape[0]

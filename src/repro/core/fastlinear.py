@@ -1,0 +1,152 @@
+"""FastEig layers: the paper's structured operators as LM building blocks.
+
+Two integration modes (DESIGN.md §3):
+
+1. ``ButterflyLinear`` — a *trainable* fast orthonormal mixing layer with a
+   fixed FFT-style conflict-free index pattern and learnable rotation angles
+   + diagonal: y = Ubar(theta) diag(d) Ubar(theta)^T x, O(n log n) per token.
+   This is the paper's "replace the Fourier matrix with a learned matrix with
+   similar computational properties" idea turned into a trainable module.
+
+2. ``compress_linear`` — post-hoc compression of a trained square projection
+   W via the polar decomposition W = Q H: the orthonormal Q is factorized
+   with the greedy Givens method (baselines.factorize_orthonormal) and the
+   symmetric PSD H with the paper's Algorithm 1, giving
+   W ~= Qbar (Ubar diag(s) Ubar^T) with O((gq + gh) ) apply cost.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gtransform as gt
+from .baselines import factorize_orthonormal
+from .staging import StagedG, pack_g, pack_g_adjoint
+from .types import GFactors
+
+
+class ButterflyParams(NamedTuple):
+    theta: jnp.ndarray  # (S, P) rotation angles (trainable)
+    diag: jnp.ndarray   # (n,) diagonal (trainable)
+
+
+class ButterflyPattern(NamedTuple):
+    idx_i: jnp.ndarray  # (S, P) int32 — static FFT-style disjoint pairs
+    idx_j: jnp.ndarray  # (S, P) int32
+    n: int
+
+
+def fft_pattern(n: int, n_stages: int | None = None) -> ButterflyPattern:
+    """FFT-butterfly index pattern: stage k pairs (i, i + 2^k mod-block).
+
+    Works for any even n (power-of-two strides wrap within blocks); each
+    stage is a perfect matching so it packs conflict-free by construction.
+    """
+    assert n % 2 == 0, "butterfly mixing needs even width"
+    depth = n_stages or max(int(np.ceil(np.log2(n))), 1)
+    ii, jj = [], []
+    for k in range(depth):
+        stride = 2 ** (k % max(int(np.log2(n)) if (n & (n - 1)) == 0
+                               else int(np.log2(n)) + 1, 1))
+        stride = max(stride % n, 1)
+        pairs_i, pairs_j, used = [], [], set()
+        for a in range(n):
+            b = (a + stride) % n
+            if a in used or b in used or a == b:
+                continue
+            pairs_i.append(a)
+            pairs_j.append(b)
+            used.add(a)
+            used.add(b)
+        # pad to n//2 with no-op self pairs on an unused index
+        free = [x for x in range(n) if x not in used]
+        pad = free[0] if free else 0
+        while len(pairs_i) < n // 2:
+            pairs_i.append(pad)
+            pairs_j.append(pad)
+        ii.append(pairs_i)
+        jj.append(pairs_j)
+    return ButterflyPattern(jnp.asarray(np.array(ii, np.int32)),
+                            jnp.asarray(np.array(jj, np.int32)), n)
+
+
+def butterfly_init(key, pattern: ButterflyPattern,
+                   dtype=jnp.float32) -> ButterflyParams:
+    k1, _ = jax.random.split(key)
+    theta = jax.random.normal(k1, pattern.idx_i.shape, dtype) * 0.1
+    return ButterflyParams(theta=theta,
+                           diag=jnp.ones((pattern.n,), dtype))
+
+
+def _apply_stages(x, idx_i, idx_j, cos_t, sin_t):
+    def stage(xc, arrs):
+        ii, jj, cc, ss = arrs
+        xi = jnp.take(xc, ii, axis=-1)
+        xj = jnp.take(xc, jj, axis=-1)
+        # pad pairs have ii == jj; make them exact no-ops regardless of theta
+        noop = (ii == jj)
+        cc = jnp.where(noop, 1.0, cc).astype(xc.dtype)
+        ss = jnp.where(noop, 0.0, ss).astype(xc.dtype)
+        yi = cc * xi + ss * xj
+        yj = -ss * xi + cc * xj
+        xc = xc.at[..., ii].set(yi)
+        xc = xc.at[..., jj].set(yj)
+        return xc, None
+
+    out, _ = jax.lax.scan(stage, x, (idx_i, idx_j, cos_t, sin_t))
+    return out
+
+
+def butterfly_apply(params: ButterflyParams, pattern: ButterflyPattern,
+                    x: jnp.ndarray, mix_only: bool = False) -> jnp.ndarray:
+    """y = U(theta) diag(d) U(theta)^T x  (or just U(theta) x)."""
+    cos_t = jnp.cos(params.theta)
+    sin_t = jnp.sin(params.theta)
+    if mix_only:
+        return _apply_stages(x, pattern.idx_i, pattern.idx_j, cos_t, sin_t)
+    # adjoint: reversed stages with -sin
+    y = _apply_stages(x, pattern.idx_i[::-1], pattern.idx_j[::-1],
+                      cos_t[::-1], -sin_t[::-1])
+    y = y * params.diag.astype(y.dtype)
+    return _apply_stages(y, pattern.idx_i, pattern.idx_j, cos_t, sin_t)
+
+
+class CompressedLinear(NamedTuple):
+    """W ~= Qbar @ (Ubar diag(s) Ubar^T): all-butterfly square projection."""
+
+    q_fwd: StagedG
+    h_fwd: StagedG
+    h_adj: StagedG
+    diag: jnp.ndarray
+
+
+def compress_linear(w: jnp.ndarray, g_orth: int, g_sym: int,
+                    n_iter: int = 6) -> Tuple[CompressedLinear, dict]:
+    """Compress a square W via polar form + the paper's factorizations."""
+    n = w.shape[0]
+    w64 = np.asarray(w, np.float64)
+    u, sv, vt = np.linalg.svd(w64)
+    q = (u @ vt).astype(np.float32)              # orthonormal polar factor
+    h = (vt.T * sv[None, :]) @ vt                # symmetric PSD factor
+    qf = factorize_orthonormal(jnp.asarray(q), g_orth)
+    hf, sbar, info = gt.approximate_symmetric(
+        jnp.asarray(h.astype(np.float32)), g=g_sym, n_iter=n_iter)
+    comp = CompressedLinear(q_fwd=pack_g(qf), h_fwd=pack_g(hf),
+                            h_adj=pack_g_adjoint(hf), diag=sbar)
+    # report reconstruction quality
+    qd = gt.g_to_dense(qf, n)
+    hd = gt.g_to_dense(hf, n)
+    w_hat = qd @ (hd * sbar[None, :]) @ hd.T
+    rel = float(jnp.sum((w - w_hat) ** 2) / jnp.sum(w * w))
+    return comp, {"rel_err": rel, "h_obj": float(info["objective"])}
+
+
+def compressed_linear_apply(comp: CompressedLinear, x: jnp.ndarray,
+                            backend: str = "xla") -> jnp.ndarray:
+    from repro.kernels import ops as kops
+    y = kops.sym_operator(comp.h_fwd, comp.h_adj, comp.diag, x,
+                          backend=backend)
+    return kops.g_apply(comp.q_fwd, y, backend=backend)

@@ -1,0 +1,117 @@
+"""Closed-form elementwise polynomial minimization utilities.
+
+The T-transform scores (Theorems 3 and 4) are quartic polynomials in the
+transform parameter ``a`` (shears) or quartics divided by ``a^2`` (scalings).
+Their minimization reduces to root-finding on low-degree derivative
+polynomials.  Everything here is branchless elementwise jnp so the score
+*sweeps over all n^2 index pairs* vectorize.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+def real_cubic_roots(a3, a2, a1, a0):
+    """Real roots of a3 x^3 + a2 x^2 + a1 x + a0, elementwise.
+
+    Returns an array stacked on the last axis with 3 candidates; degenerate
+    (quadratic/linear) cases fall back gracefully and may duplicate roots.
+    """
+    a3, a2, a1, a0 = jnp.broadcast_arrays(a3, a2, a1, a0)
+    dt = jnp.result_type(a3, jnp.float32)
+    scale = jnp.maximum(jnp.maximum(jnp.abs(a3), jnp.abs(a2)),
+                        jnp.maximum(jnp.abs(a1), jnp.abs(a0))) + _TINY
+    is_cubic = jnp.abs(a3) > 1e-12 * scale
+    is_quad = jnp.abs(a2) > 1e-12 * scale
+
+    # --- cubic branch (normalized) ---
+    a3s = jnp.where(is_cubic, a3, 1.0)
+    A = a2 / a3s
+    B = a1 / a3s
+    C = a0 / a3s
+    p = B - A * A / 3.0
+    q = 2.0 * A ** 3 / 27.0 - A * B / 3.0 + C
+    disc = (q / 2.0) ** 2 + (p / 3.0) ** 3
+    # one real root
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    u = jnp.cbrt(-q / 2.0 + sq)
+    v = jnp.cbrt(-q / 2.0 - sq)
+    r_single = u + v - A / 3.0
+    # three real roots (disc <= 0 implies p <= 0):
+    # t_k = 2 sqrt(-p/3) cos(arccos(3q/(2p) * sqrt(-3/p))/3 - 2 pi k/3)
+    mneg = jnp.sqrt(jnp.maximum(-p / 3.0, 0.0))
+    denom = jnp.where(jnp.abs(p * mneg) > _TINY, p * mneg, 1.0)
+    cos_arg = jnp.clip(1.5 * q / denom, -1.0, 1.0)
+    theta = jnp.arccos(cos_arg) / 3.0
+    two_pi_3 = 2.0 * jnp.pi / 3.0
+    r0 = 2.0 * mneg * jnp.cos(theta) - A / 3.0
+    r1 = 2.0 * mneg * jnp.cos(theta - two_pi_3) - A / 3.0
+    r2 = 2.0 * mneg * jnp.cos(theta - 2.0 * two_pi_3) - A / 3.0
+    one_real = disc > 0
+    c0 = jnp.where(one_real, r_single, r0)
+    c1 = jnp.where(one_real, r_single, r1)
+    c2 = jnp.where(one_real, r_single, r2)
+    # disc ~ 0 (double-root boundary) is unstable in f32: add the exact
+    # disc=0 candidates  t1 = 3q/p, t2 = t3 = -3q/(2p)  unconditionally
+    # (downstream filters candidates by objective value, extras are free)
+    p_safe = jnp.where(jnp.abs(p) > _TINY, p, 1.0)
+    c3 = 3.0 * q / p_safe - A / 3.0
+    c4 = -1.5 * q / p_safe - A / 3.0
+
+    # --- quadratic fallback: a2 x^2 + a1 x + a0 ---
+    a2s = jnp.where(is_quad, a2, 1.0)
+    qd = a1 * a1 - 4.0 * a2 * a0
+    sqq = jnp.sqrt(jnp.maximum(qd, 0.0))
+    q0 = (-a1 + sqq) / (2.0 * a2s)
+    q1 = (-a1 - sqq) / (2.0 * a2s)
+    # --- linear fallback: a1 x + a0 ---
+    a1s = jnp.where(jnp.abs(a1) > 1e-12 * scale, a1, 1.0)
+    lin = -a0 / a1s
+
+    f0 = jnp.where(is_quad, q0, lin)
+    f1 = jnp.where(is_quad, q1, lin)
+    c0 = jnp.where(is_cubic, c0, f0)
+    c1 = jnp.where(is_cubic, c1, f1)
+    c2 = jnp.where(is_cubic, c2, f0)
+    c3 = jnp.where(is_cubic, c3, f0)
+    c4 = jnp.where(is_cubic, c4, f1)
+    out = jnp.stack([c0, c1, c2, c3, c4], axis=-1).astype(dt)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def minimize_quartic(c1, c2, c3, c4, extra_candidates=None, clip=1e4):
+    """Minimize q(a) = c1 a + c2 a^2 + c3 a^3 + c4 a^4 elementwise.
+
+    q(0) = 0, so the returned value is always <= 0 (taking a=0 recovers the
+    identity transform).  Returns (a_star, q_star).
+    """
+    roots = real_cubic_roots(4.0 * c4, 3.0 * c3, 2.0 * c2, c1)
+    cands = [roots[..., k] for k in range(roots.shape[-1])]
+    cands.append(jnp.zeros_like(roots[..., 0]))
+    if extra_candidates is not None:
+        cands.extend(extra_candidates)
+    best_a = jnp.zeros_like(cands[0])
+    best_v = jnp.zeros_like(cands[0])
+    for a in cands:
+        a = jnp.clip(a, -clip, clip)
+        v = a * (c1 + a * (c2 + a * (c3 + a * c4)))
+        v = jnp.where(jnp.isfinite(v), v, jnp.inf)
+        take = v < best_v
+        best_a = jnp.where(take, a, best_a)
+        best_v = jnp.where(take, v, best_v)
+    return best_a, best_v
+
+
+# 5-point exact fit of a quartic: P(a) = sum_k p_k a^k through samples at
+# fixed abscissae (all nonzero so rational a^-1, a^-2 terms stay finite).
+QUARTIC_POINTS = jnp.array([-2.0, -1.0, 0.5, 1.0, 2.0])
+_V = jnp.stack([QUARTIC_POINTS ** k for k in range(5)], axis=-1)  # (5, 5)
+QUARTIC_VANDER_INV = jnp.linalg.inv(_V)  # coefficients = INV @ values
+
+
+def fit_quartic(values):
+    """values: (..., 5) evaluations at QUARTIC_POINTS -> (..., 5) coeffs."""
+    return jnp.einsum("ck,...k->...c", QUARTIC_VANDER_INV.astype(values.dtype),
+                      values)

@@ -1,0 +1,181 @@
+"""Conflict-free stage packing: the TPU adaptation of sequential 2x2 chains.
+
+The paper applies its g transforms sequentially (6 flops each on CPU).  On a
+TPU that is the worst possible shape.  Disjoint 2x2 transforms commute, so the
+ordered factor list can be packed greedily (ASAP list scheduling) into
+*stages* whose transforms touch pairwise-disjoint coordinates; each stage then
+applies as one vectorized gather -> 2xFMA -> scatter step.  Packing preserves
+the exact operator: the relative order of any two *conflicting* transforms is
+never changed.
+
+For Theorem-1-initialized factor chains with g = alpha * n log2 n the greedy
+packing empirically produces ~2 alpha log2 n stages of ~n/2 pairs (see
+tests/test_staging.py), turning an O(g)-deep dependency chain into an
+O(log n)-deep one.
+
+Packing happens on the host (numpy, once per factorization); the staged
+arrays are then consumed by jit code (kernels/ or the XLA reference path).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .types import GFactors, SCALE, SHEAR, TFactors
+
+
+class StagedG(NamedTuple):
+    """G-transforms packed into conflict-free stages (padded to width P).
+
+    Padding entries use an index unused by the stage with (c=1, s=0,
+    sigma=1): an exact no-op under y_i = c x_i + s x_j;
+    y_j = sigma (-s x_i + c x_j).
+    """
+
+    idx_i: jnp.ndarray   # (S, P) int32
+    idx_j: jnp.ndarray   # (S, P) int32
+    c: jnp.ndarray       # (S, P)
+    s: jnp.ndarray       # (S, P)
+    sigma: jnp.ndarray   # (S, P)
+    n: int
+
+    @property
+    def num_stages(self) -> int:
+        return self.idx_i.shape[0]
+
+
+class StagedT(NamedTuple):
+    """T-transforms packed into stages.  Unified per-pair action
+    y_i = alpha x_i + beta x_j with (alpha, beta) = (1, a) for shears and
+    (a, 0) for scalings.  Padding: (alpha=1, beta=0) at an unused index."""
+
+    idx_i: jnp.ndarray   # (S, P) int32 (written coordinate)
+    idx_j: jnp.ndarray   # (S, P) int32 (read coordinate)
+    alpha: jnp.ndarray   # (S, P)
+    beta: jnp.ndarray    # (S, P)
+    n: int
+
+    @property
+    def num_stages(self) -> int:
+        return self.idx_i.shape[0]
+
+
+def _greedy_schedule(touch_sets) -> Tuple[np.ndarray, int]:
+    """ASAP list scheduling.  touch_sets: list of tuples of coordinates.
+
+    Returns (stage_id per factor, num_stages)."""
+    busy_until = {}
+    stage_of = np.zeros(len(touch_sets), dtype=np.int64)
+    n_stages = 0
+    for k, coords in enumerate(touch_sets):
+        st = 0
+        for c in coords:
+            st = max(st, busy_until.get(int(c), 0))
+        stage_of[k] = st
+        for c in coords:
+            busy_until[int(c)] = st + 1
+        n_stages = max(n_stages, st + 1)
+    return stage_of, n_stages
+
+
+def _pad_layout(stage_of, n_stages, n, idx_pairs):
+    """Common padded (S, P) layout: returns (slots, pad_index per stage, P).
+
+    Padding entries use the OUT-OF-BOUNDS index ``n``: the apply functions
+    scatter with mode="drop", so pads are structural no-ops.  (An in-range
+    "identity write at an unused index" is unsound: a stage that touches
+    all n coordinates has no unused index, and a duplicate scatter index
+    clobbers a real factor's write — found by hypothesis.)"""
+    counts = np.bincount(stage_of, minlength=n_stages)
+    width = max(int(counts.max()), 1)
+    slot = np.zeros_like(stage_of)
+    seen = np.zeros(n_stages, dtype=np.int64)
+    for k, st in enumerate(stage_of):
+        slot[k] = seen[st]
+        seen[st] += 1
+    pad_idx = np.full(n_stages, n, dtype=np.int64)
+    return slot, pad_idx, width
+
+
+def pack_g(factors: GFactors) -> "StagedG":
+    fi = np.asarray(factors.i)
+    fj = np.asarray(factors.j)
+    fc = np.asarray(factors.c)
+    fs = np.asarray(factors.s)
+    fsg = np.asarray(factors.sigma)
+    n = int(max(fi.max(initial=0), fj.max(initial=0))) + 1
+    pairs = [(int(a), int(b)) for a, b in zip(fi, fj)]
+    stage_of, n_stages = _greedy_schedule(pairs)
+    slot, pad_idx, width = _pad_layout(stage_of, n_stages, n, pairs)
+
+    ii = np.repeat(pad_idx[:, None], width, axis=1).astype(np.int32)
+    jj = ii.copy()
+    cc = np.ones((n_stages, width), fc.dtype)
+    ss = np.zeros((n_stages, width), fs.dtype)
+    sg = np.ones((n_stages, width), fsg.dtype)
+    ii[stage_of, slot] = fi
+    jj[stage_of, slot] = fj
+    cc[stage_of, slot] = fc
+    ss[stage_of, slot] = fs
+    sg[stage_of, slot] = fsg
+    return StagedG(jnp.asarray(ii), jnp.asarray(jj), jnp.asarray(cc),
+                   jnp.asarray(ss), jnp.asarray(sg), n)
+
+
+def pack_t(factors: TFactors, n: int) -> "StagedT":
+    fk = np.asarray(factors.kind)
+    fi = np.asarray(factors.i)
+    fj = np.asarray(factors.j)
+    fa = np.asarray(factors.a)
+    touch = []
+    for k in range(len(fk)):
+        if fk[k] == SCALE:
+            touch.append((int(fi[k]),))
+        else:
+            touch.append((int(fi[k]), int(fj[k])))
+    stage_of, n_stages = _greedy_schedule(touch)
+    slot, pad_idx, width = _pad_layout(stage_of, n_stages, n, touch)
+
+    ii = np.repeat(pad_idx[:, None], width, axis=1).astype(np.int32)
+    jj = ii.copy()
+    al = np.ones((n_stages, width), fa.dtype)
+    be = np.zeros((n_stages, width), fa.dtype)
+    is_scale = fk == SCALE
+    ii[stage_of, slot] = fi
+    jj[stage_of, slot] = np.where(is_scale, fi, fj)
+    al[stage_of, slot] = np.where(is_scale, fa, 1.0)
+    be[stage_of, slot] = np.where(is_scale, 0.0, fa)
+    return StagedT(jnp.asarray(ii), jnp.asarray(jj), jnp.asarray(al),
+                   jnp.asarray(be), n)
+
+
+def pack_t_inverse(factors: TFactors, n: int) -> "StagedT":
+    """Staged form of Tbar^{-1} (reverse order; shear a -> -a, scale a -> 1/a)."""
+    kinds = np.asarray(factors.kind)
+    a = np.asarray(factors.a)
+    safe = np.where(kinds == SCALE, a, 1.0)  # shears may carry a == 0
+    inv_a = np.where(kinds == SCALE, 1.0 / safe, -a)
+    rev = TFactors(
+        kind=jnp.asarray(np.asarray(factors.kind)[::-1].copy()),
+        i=jnp.asarray(np.asarray(factors.i)[::-1].copy()),
+        j=jnp.asarray(np.asarray(factors.j)[::-1].copy()),
+        a=jnp.asarray(inv_a[::-1].copy()),
+    )
+    return pack_t(rev, n)
+
+
+def pack_g_adjoint(factors: GFactors) -> "StagedG":
+    """Staged form of Ubar^T (reverse order; rotations flip s)."""
+    s = np.asarray(factors.s)
+    sg = np.asarray(factors.sigma)
+    s_adj = np.where(sg > 0, -s, s)
+    rev = GFactors(
+        i=jnp.asarray(np.asarray(factors.i)[::-1].copy()),
+        j=jnp.asarray(np.asarray(factors.j)[::-1].copy()),
+        c=jnp.asarray(np.asarray(factors.c)[::-1].copy()),
+        s=jnp.asarray(s_adj[::-1].copy()),
+        sigma=jnp.asarray(sg[::-1].copy()),
+    )
+    return pack_g(rev)

@@ -1,0 +1,75 @@
+"""Factor containers for the paper's two structured operator families.
+
+G-transforms (eq. 3-5): extended orthonormal Givens transforms — rotations
+(sigma=+1) and reflections (sigma=-1). Canonical 2x2 block acting on
+coordinates (i, j), j > i::
+
+    [ c        s      ]
+    [ -sigma*s sigma*c ]   with c^2 + s^2 = 1
+
+so that  y_i = c x_i + s x_j ;  y_j = sigma * (-s x_i + c x_j).
+Rotation (sigma=+1) transposes to (c, -s, +1); reflection is symmetric.
+
+T-transforms (eq. 8-10): scaling and shear transforms.  We collapse the
+paper's upper/lower shears into a single *ordered-pair* shear: kind=SHEAR at
+ordered (i, j), i != j, is  T = I + a * e_i e_j^T  (x_i += a x_j), which is the
+paper's upper shear when j > i and its lower shear when j < i.  kind=SCALE at
+(i, i) scales coordinate i by a.  Inverses are free:  shear a -> -a, scale
+a -> 1/a.
+
+Factors are stored in APPLICATION order: ``apply(factors, x)`` applies factor
+0 first, i.e. ``Ubar = G_{g-1} ... G_1 G_0`` in matrix terms (the paper's
+eq. (5) with its k=1 factor stored first).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+SCALE = 0  # T-transform kind: diagonal scaling at index i (j == i)
+SHEAR = 1  # T-transform kind: x_i += a * x_j  (ordered pair, i != j)
+
+
+class GFactors(NamedTuple):
+    """A sequence of g extended Givens transforms."""
+
+    i: jnp.ndarray      # (g,) int32, first coordinate
+    j: jnp.ndarray      # (g,) int32, second coordinate (j > i)
+    c: jnp.ndarray      # (g,) float, cosine-like value
+    s: jnp.ndarray      # (g,) float, sine-like value
+    sigma: jnp.ndarray  # (g,) float in {+1.0, -1.0}: rotation / reflection
+
+    @property
+    def g(self) -> int:
+        return self.i.shape[0]
+
+
+class TFactors(NamedTuple):
+    """A sequence of m scaling / shear transforms."""
+
+    kind: jnp.ndarray  # (m,) int32 in {SCALE, SHEAR}
+    i: jnp.ndarray     # (m,) int32
+    j: jnp.ndarray     # (m,) int32 (== i for SCALE)
+    a: jnp.ndarray     # (m,) float parameter
+
+    @property
+    def m(self) -> int:
+        return self.kind.shape[0]
+
+
+def gfactors_identity(g: int, dtype=jnp.float32) -> GFactors:
+    z = jnp.zeros((g,), jnp.int32)
+    return GFactors(
+        i=z, j=jnp.ones((g,), jnp.int32),
+        c=jnp.ones((g,), dtype), s=jnp.zeros((g,), dtype),
+        sigma=jnp.ones((g,), dtype),
+    )
+
+
+def tfactors_identity(m: int, dtype=jnp.float32) -> TFactors:
+    return TFactors(
+        kind=jnp.full((m,), SCALE, jnp.int32),
+        i=jnp.zeros((m,), jnp.int32), j=jnp.zeros((m,), jnp.int32),
+        a=jnp.ones((m,), dtype),
+    )

@@ -1,0 +1,2 @@
+from .generators import (community_graph, erdos_renyi, sensor_graph,
+                         directed_variant, real_graph_standin, GRAPHS)

@@ -1,0 +1,76 @@
+"""Public jit'd wrappers with an xla|pallas backend switch.
+
+``backend="xla"`` routes to the pure-jnp oracle (ref.py) — this is the path
+the 512-device dry-run lowers (Pallas TPU kernels cannot lower on the CPU
+backend).  ``backend="pallas"`` routes to the Pallas kernels; in this
+container they execute with interpret=True.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.staging import (StagedG, StagedT, pack_g, pack_g_adjoint,
+                                pack_t, pack_t_inverse)
+from repro.core.types import GFactors, TFactors
+from . import butterfly as _bf
+from . import ref as _ref
+from . import shear as _sh
+
+
+def g_apply(staged: StagedG, x: jnp.ndarray, backend: str = "xla",
+            interpret: bool = True) -> jnp.ndarray:
+    """y[..., :] = Ubar x (staged)."""
+    if backend == "xla":
+        return _ref.staged_g_apply(staged, x)
+    if backend == "pallas":
+        flat = x.reshape(-1, x.shape[-1])
+        return _bf.butterfly_apply(staged, flat,
+                                   interpret=interpret).reshape(x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def t_apply(staged: StagedT, x: jnp.ndarray, backend: str = "xla",
+            interpret: bool = True) -> jnp.ndarray:
+    if backend == "xla":
+        return _ref.staged_t_apply(staged, x)
+    if backend == "pallas":
+        flat = x.reshape(-1, x.shape[-1])
+        return _sh.shear_apply(staged, flat,
+                               interpret=interpret).reshape(x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def sym_operator(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
+                 x: jnp.ndarray, backend: str = "xla",
+                 interpret: bool = True) -> jnp.ndarray:
+    """Sbar x = Ubar diag(d) Ubar^T x."""
+    if backend == "xla":
+        return _ref.sym_operator_apply(fwd, adj, diag, x)
+    if backend == "pallas":
+        flat = x.reshape(-1, x.shape[-1])
+        return _bf.sym_operator_apply(fwd, adj, diag, flat,
+                                      interpret=interpret).reshape(x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
+                 x: jnp.ndarray, backend: str = "xla",
+                 interpret: bool = True) -> jnp.ndarray:
+    """Cbar x = Tbar diag(d) Tbar^{-1} x."""
+    if backend == "xla":
+        return _ref.gen_operator_apply(fwd, inv, diag, x)
+    if backend == "pallas":
+        flat = x.reshape(-1, x.shape[-1])
+        return _sh.gen_operator_apply(fwd, inv, diag, flat,
+                                      interpret=interpret).reshape(x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def stage_g(factors: GFactors):
+    """Convenience: (forward, adjoint) staged forms."""
+    return pack_g(factors), pack_g_adjoint(factors)
+
+
+def stage_t(factors: TFactors, n: int):
+    """Convenience: (forward, inverse) staged forms."""
+    return pack_t(factors, n), pack_t_inverse(factors, n)

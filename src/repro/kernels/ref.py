@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the semantics of record: Pallas kernels must match them (see
+tests/test_kernels.py shape/dtype sweeps).  They are also the production
+``backend="xla"`` path used by the dry-run (Pallas TPU kernels cannot lower
+on the CPU backend; DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.staging import StagedG, StagedT
+
+
+def staged_g_apply(staged: StagedG, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply the staged G-transform product to x (..., n) on the last axis."""
+
+    def stage(xc, arrs):
+        ii, jj, cc, ss, sg = arrs
+        cc = cc.astype(xc.dtype)
+        ss = ss.astype(xc.dtype)
+        sg = sg.astype(xc.dtype)
+        # padding entries carry the out-of-bounds index n: reads clip
+        # (value unused), writes drop (structural no-op)
+        xi = jnp.take(xc, ii, axis=-1, mode="clip")
+        xj = jnp.take(xc, jj, axis=-1, mode="clip")
+        yi = cc * xi + ss * xj
+        yj = sg * (-ss * xi + cc * xj)
+        xc = xc.at[..., ii].set(yi, mode="drop")
+        xc = xc.at[..., jj].set(yj, mode="drop")
+        return xc, None
+
+    out, _ = lax.scan(stage, x, (staged.idx_i, staged.idx_j, staged.c,
+                                 staged.s, staged.sigma))
+    return out
+
+
+def staged_t_apply(staged: StagedT, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply the staged T-transform product to x (..., n) on the last axis."""
+
+    def stage(xc, arrs):
+        ii, jj, al, be = arrs
+        al = al.astype(xc.dtype)
+        be = be.astype(xc.dtype)
+        xi = jnp.take(xc, ii, axis=-1, mode="clip")
+        xj = jnp.take(xc, jj, axis=-1, mode="clip")
+        yi = al * xi + be * xj
+        xc = xc.at[..., ii].set(yi, mode="drop")
+        return xc, None
+
+    out, _ = lax.scan(stage, x, (staged.idx_i, staged.idx_j, staged.alpha,
+                                 staged.beta))
+    return out
+
+
+def sym_operator_apply(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
+                       x: jnp.ndarray) -> jnp.ndarray:
+    """Sbar x = Ubar diag(sbar) Ubar^T x (the symmetric FGFT projection)."""
+    y = staged_g_apply(adj, x)
+    y = y * diag.astype(y.dtype)
+    return staged_g_apply(fwd, y)
+
+
+def gen_operator_apply(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
+                       x: jnp.ndarray) -> jnp.ndarray:
+    """Cbar x = Tbar diag(cbar) Tbar^{-1} x (the directed FGFT projection)."""
+    y = staged_t_apply(inv, x)
+    y = y * diag.astype(y.dtype)
+    return staged_t_apply(fwd, y)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: staged T-transform (scaling/shear) application.
+
+Same VMEM tiling strategy as butterfly.py; the per-pair action is the
+unified  y_i = alpha x_i + beta x_j  (2 flops/pair — the paper's efficiency
+argument for T- over G-transforms carries straight to the VPU).  The fused
+general-operator kernel applies  Tbar diag(d) Tbar^{-1}  in one round trip
+(directed-graph FGFT projection).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.staging import StagedT
+
+DEFAULT_BLOCK_B = 128
+
+
+def _stage_body(x, ii, jj, al, be):
+    xi = jnp.take(x, ii, axis=1)
+    xj = jnp.take(x, jj, axis=1)
+    yi = al[None, :] * xi + be[None, :] * xj
+    return x.at[:, ii].set(yi)
+
+
+def _shear_kernel(ii_ref, jj_ref, a_ref, b_ref, x_ref, o_ref):
+    x = x_ref[...]
+    dt = x.dtype
+
+    def body(st, xc):
+        return _stage_body(xc, ii_ref[st], jj_ref[st],
+                           a_ref[st].astype(dt), b_ref[st].astype(dt))
+
+    o_ref[...] = lax.fori_loop(0, ii_ref.shape[0], body, x)
+
+
+def _fused_gen_kernel(iii_ref, ijj_ref, ia_ref, ib_ref,
+                      fii_ref, fjj_ref, fa_ref, fb_ref,
+                      d_ref, x_ref, o_ref):
+    x = x_ref[...]
+    dt = x.dtype
+
+    def inv_body(st, xc):
+        return _stage_body(xc, iii_ref[st], ijj_ref[st],
+                           ia_ref[st].astype(dt), ib_ref[st].astype(dt))
+
+    x = lax.fori_loop(0, iii_ref.shape[0], inv_body, x)
+    x = x * d_ref[...].astype(dt)[None, :]
+
+    def fwd_body(st, xc):
+        return _stage_body(xc, fii_ref[st], fjj_ref[st],
+                           fa_ref[st].astype(dt), fb_ref[st].astype(dt))
+
+    o_ref[...] = lax.fori_loop(0, fii_ref.shape[0], fwd_body, x)
+
+
+def _full_spec(arr):
+    return pl.BlockSpec(arr.shape, lambda b: (0,) * arr.ndim)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def shear_apply(staged: StagedT, x: jnp.ndarray,
+                block_b: int = DEFAULT_BLOCK_B,
+                interpret: bool = True) -> jnp.ndarray:
+    """y = Tbar @ x for batched x of shape (B, n).
+
+    One dummy column absorbs padding entries (index n no-ops)."""
+    b, n = x.shape
+    bb = min(block_b, b)
+    grid = (pl.cdiv(b, bb),)
+    xp = jnp.pad(x, ((0, 0), (0, 1)))
+    tables = (staged.idx_i, staged.idx_j, staged.alpha, staged.beta)
+    out = pl.pallas_call(
+        _shear_kernel,
+        grid=grid,
+        in_specs=[_full_spec(t) for t in tables]
+        + [pl.BlockSpec((bb, n + 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, n + 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n + 1), x.dtype),
+        interpret=interpret,
+    )(*tables, xp)
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def gen_operator_apply(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
+                       x: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B,
+                       interpret: bool = True) -> jnp.ndarray:
+    """y = Tbar diag(d) Tbar^{-1} x, fused."""
+    b, n = x.shape
+    bb = min(block_b, b)
+    grid = (pl.cdiv(b, bb),)
+    xp = jnp.pad(x, ((0, 0), (0, 1)))
+    dp = jnp.pad(diag, (0, 1), constant_values=1.0)
+    tables = (inv.idx_i, inv.idx_j, inv.alpha, inv.beta,
+              fwd.idx_i, fwd.idx_j, fwd.alpha, fwd.beta, dp)
+    out = pl.pallas_call(
+        _fused_gen_kernel,
+        grid=grid,
+        in_specs=[_full_spec(t) for t in tables]
+        + [pl.BlockSpec((bb, n + 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, n + 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n + 1), x.dtype),
+        interpret=interpret,
+    )(*tables, xp)
+    return out[:, :n]

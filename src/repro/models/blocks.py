@@ -1,0 +1,499 @@
+"""Transformer / SSM / RG-LRU / MoE building blocks.
+
+Every block is a pair (init_<block>, <block>) where init records parameters
+with logical axes via common.param and the apply function optionally threads
+a decode cache: cache=None -> training/prefill; cache=dict -> single-token
+decode with ``pos`` giving the current position per batch row.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .common import (ModelConfig, apply_rope, attention, constrain_dims,
+                     constrain_tokens, param, rmsnorm, rope_tables, softcap)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Self-attention (global / local) with GQA + RoPE
+# ---------------------------------------------------------------------------
+
+def init_attn(p: str, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out = {
+        "wq": param(f"{p}.wq", (d, h, hd), ("embed", "heads", None)),
+        "wk": param(f"{p}.wk", (d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": param(f"{p}.wv", (d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": param(f"{p}.wo", (h, hd, d), ("heads", None, "embed")),
+        "norm": param(f"{p}.norm", (d,), (None,), init="zeros"),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = param(f"{p}.bq", (h, hd), ("heads", None), init="zeros")
+        out["bk"] = param(f"{p}.bk", (kv, hd), ("kv_heads", None),
+                          init="zeros")
+        out["bv"] = param(f"{p}.bv", (kv, hd), ("kv_heads", None),
+                          init="zeros")
+    return out
+
+
+def attn_block(w: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+               positions: jnp.ndarray, window: int = 0, causal: bool = True,
+               cache: Optional[Params] = None,
+               ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, D); positions: (B, S). Returns (x_out, new_cache).
+
+    Modes: cache=None -> training; cache + S>1 -> prefill (attend within the
+    prompt, scatter the tail into the cache); cache + S==1 -> decode against
+    the cache.  Caches shorter than the context act as ring buffers
+    (slot = pos % len, stored positions drive masking) — bounded-memory
+    local-attention decode.
+    """
+    h = rmsnorm(x, w["norm"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, w["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, w["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, w["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + w["bq"].astype(h.dtype)
+        k = k + w["bk"].astype(h.dtype)
+        v = v + w["bv"].astype(h.dtype)
+    sin, cos = rope_tables(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    b, s = x.shape[:2]
+
+    if cache is None:
+        o = attention(q, k, v, positions, positions, causal=causal,
+                      window=window, cap=cfg.attn_softcap,
+                      impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                      skip=cfg.attn_skip)
+        new_cache = None
+    elif s > 1:
+        # prefill: attend within the prompt; write the tail into the cache
+        o = attention(q, k, v, positions, positions, causal=causal,
+                      window=window, cap=cfg.attn_softcap,
+                      impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                      skip=cfg.attn_skip)
+        clen = cache["k"].shape[1]
+        tail = min(s, clen)
+        k_t, v_t, p_t = k[:, -tail:], v[:, -tail:], positions[:, -tail:]
+        slot = p_t % clen
+        bi = jnp.arange(b)[:, None]
+        ck = cache["k"].at[bi, slot].set(k_t.astype(cache["k"].dtype))
+        cv = cache["v"].at[bi, slot].set(v_t.astype(cache["v"].dtype))
+        cp = cache["pos"].at[bi, slot].set(p_t.astype(jnp.int32))
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+    else:
+        # decode: insert one token, attend to the cache
+        clen = cache["k"].shape[1]
+        pos0 = positions[:, 0]
+        slot = pos0 % clen
+        bi = jnp.arange(b)
+        ck = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
+        cp = cache["pos"].at[bi, slot].set(pos0.astype(jnp.int32))
+        o = attention(q, ck.astype(q.dtype), cv.astype(q.dtype), positions,
+                      cp, causal=causal, window=window,
+                      cap=cfg.attn_softcap, impl=cfg.attn_impl,
+                      chunk=cfg.attn_chunk, skip=cfg.attn_skip)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+    out = jnp.einsum("bshk,hkd->bsd", o, w["wo"].astype(o.dtype))
+    return x + out.astype(x.dtype), new_cache
+
+
+def init_cross_attn(p: str, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": param(f"{p}.wq", (d, h, hd), ("embed", "heads", None)),
+        "wk": param(f"{p}.wk", (d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": param(f"{p}.wv", (d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": param(f"{p}.wo", (h, hd, d), ("heads", None, "embed")),
+        "norm": param(f"{p}.norm", (d,), (None,), init="zeros"),
+        "gate": param(f"{p}.gate", (1,), (None,), init="zeros"),
+    }
+
+
+def cross_attn_block(w: Params, x: jnp.ndarray, memory: jnp.ndarray,
+                     cfg: ModelConfig) -> jnp.ndarray:
+    """Cross-attention to a fixed memory (patch/frame/encoder states)."""
+    h = rmsnorm(x, w["norm"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, w["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", memory.astype(h.dtype),
+                   w["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", memory.astype(h.dtype),
+                   w["wv"].astype(h.dtype))
+    b, sq = x.shape[:2]
+    sk = memory.shape[1]
+    qpos = jnp.zeros((b, sq), jnp.int32)
+    kpos = jnp.zeros((b, sk), jnp.int32)
+    o = attention(q, k, v, qpos, kpos, causal=False, window=0,
+                  cap=None, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                  skip=cfg.attn_skip)
+    out = jnp.einsum("bshk,hkd->bsd", o, w["wo"].astype(o.dtype))
+    gate = jnp.tanh(w["gate"].astype(jnp.float32)).astype(x.dtype)
+    return x + gate * out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense) — swiglu/geglu/gelu, with optional butterfly fast mixing
+# ---------------------------------------------------------------------------
+
+def init_mlp(p: str, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    out = {"norm": param(f"{p}.norm", (d,), (None,), init="zeros")}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        out["w_gate"] = param(f"{p}.w_gate", (d, f), ("embed", "ff"))
+        out["w_up"] = param(f"{p}.w_up", (d, f), ("embed", "ff"))
+    else:
+        out["w_up"] = param(f"{p}.w_up", (d, f), ("embed", "ff"))
+    out["w_down"] = param(f"{p}.w_down", (f, d), ("ff", "embed"))
+    if cfg.butterfly_mlp:
+        depth = max(int(np.ceil(np.log2(d))), 1)
+        out["bf_theta"] = param(f"{p}.bf_theta", (depth, d // 2),
+                                (None, None), init="zeros")
+    return out
+
+
+def _butterfly_mix(theta: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """FFT-pattern orthonormal mixing (the paper's fast-transform layer)."""
+    n = x.shape[-1]
+    depth = theta.shape[0]
+
+    def stage(xc, arrs):
+        th, k = arrs
+        stride = 2 ** (k % max(int(np.ceil(np.log2(n))), 1))
+        idx = jnp.arange(n // 2)
+        block = (idx // stride) * (2 * stride)
+        ii = block + idx % stride
+        jj = ii + stride
+        ii = jnp.where(jj < n, ii, idx)          # degenerate guard
+        jj = jnp.where(jj < n, jj, idx + n // 2)
+        cc = jnp.cos(th).astype(xc.dtype)
+        ss = jnp.sin(th).astype(xc.dtype)
+        xi = jnp.take(xc, ii, axis=-1)
+        xj = jnp.take(xc, jj, axis=-1)
+        xc = xc.at[..., ii].set(cc * xi + ss * xj)
+        xc = xc.at[..., jj].set(-ss * xi + cc * xj)
+        return xc, None
+
+    out, _ = lax.scan(stage, x, (theta, jnp.arange(depth)))
+    return out
+
+
+def mlp_block(w: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = rmsnorm(x, w["norm"], cfg.rms_eps)
+    if cfg.butterfly_mlp:
+        h = _butterfly_mix(w["bf_theta"], h)
+    if cfg.mlp_type == "swiglu":
+        a = jax.nn.silu(h @ w["w_gate"].astype(h.dtype))
+        u = h @ w["w_up"].astype(h.dtype)
+        z = a * u
+    elif cfg.mlp_type == "geglu":
+        a = jax.nn.gelu(h @ w["w_gate"].astype(h.dtype), approximate=True)
+        u = h @ w["w_up"].astype(h.dtype)
+        z = a * u
+    else:
+        z = jax.nn.gelu(h @ w["w_up"].astype(h.dtype), approximate=True)
+    out = z @ w["w_down"].astype(z.dtype)
+    return x + out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE block — sort-based per-group dispatch with capacity (EP over "model")
+# ---------------------------------------------------------------------------
+
+def init_moe(p: str, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "norm": param(f"{p}.norm", (d,), (None,), init="zeros"),
+        "router": param(f"{p}.router", (d, e), ("embed", None)),
+        "w_gate": param(f"{p}.w_gate", (e, d, f), ("expert", "embed", "ff")),
+        "w_up": param(f"{p}.w_up", (e, d, f), ("expert", "embed", "ff")),
+        "w_down": param(f"{p}.w_down", (e, f, d), ("expert", "ff", "embed")),
+    }
+
+
+def moe_block(w: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Token-choice top-k with per-group capacity, sort-based dispatch.
+
+    Groups are (batch row x moe_group tokens) so sorting is local to a data
+    shard; experts shard over "model" (EP).  Capacity-dropped tokens pass
+    through the residual unchanged.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    h = rmsnorm(x, w["norm"], cfg.rms_eps)
+    gsz = min(cfg.moe_group or s, b * s)   # decode: fewer tokens than group
+    while (b * s) % gsz:                   # keep groups exact
+        gsz -= 1
+    g = b * s // gsz
+    hg = constrain_tokens(h.reshape(g, gsz, d))
+
+    logits = jnp.einsum("gtd,de->gte", hg, w["router"].astype(h.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = lax.top_k(probs, k)                      # (g, t, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(gsz * k / e * cfg.capacity_factor))
+    flat_e = top_e.reshape(g, gsz * k)
+    flat_w = top_p.reshape(g, gsz * k)
+    flat_t = jnp.broadcast_to(jnp.arange(gsz)[:, None],
+                              (gsz, k)).reshape(gsz * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)       # group experts
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=-1)
+    sorted_t = flat_t[order]                                 # (g, t*k)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)
+    pos = jnp.arange(gsz * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)                        # drop slot
+
+    # token-index and weight tables (g, e, cap) (+1 trash slot)
+    table = jnp.full((g, e, cap + 1), gsz, jnp.int32)
+    wtab = jnp.zeros((g, e, cap + 1), jnp.float32)
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None], sorted_e.shape)
+    table = table.at[gi, sorted_e, pos_c].set(sorted_t.astype(jnp.int32))
+    wtab = wtab.at[gi, sorted_e, pos_c].set(sorted_w)
+    table = table[..., :cap]
+    wtab = wtab[..., :cap]
+
+    hpad = jnp.concatenate([hg, jnp.zeros((g, 1, d), hg.dtype)], axis=1)
+    # dispatch/combine as vmap'd per-group gather/scatter: the batched
+    # dimension_numbers let GSPMD keep the g axis sharded (a flat scatter
+    # with broadcast indices gets replicated — 16 GiB/layer of all-reduce,
+    # measured); layout pins: token-groups over data, experts over model
+    xin = jax.vmap(lambda hp, tb: hp[tb])(hpad, table)       # (g,e,cap,d)
+    xin = constrain_dims(xin, {0: "batch", 1: "model"})
+    a = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin,
+                               w["w_gate"].astype(xin.dtype)))
+    u = jnp.einsum("gecd,edf->gecf", xin, w["w_up"].astype(xin.dtype))
+    y = jnp.einsum("gecf,efd->gecd", a * u, w["w_down"].astype(xin.dtype))
+    y = constrain_dims(y * wtab[..., None].astype(y.dtype),
+                       {0: "batch", 1: "model"})
+
+    out = jax.vmap(
+        lambda tb, yy: jnp.zeros((gsz + 1, d), yy.dtype)
+        .at[tb.reshape(-1)].add(yy.reshape(-1, d)))(table, y)
+    out = constrain_tokens(out[:, :gsz].reshape(b, s, d))
+    return x + out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD block (state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+def init_ssd(p: str, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    hs = d_in // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    cw = cfg.conv_width
+    return {
+        "norm": param(f"{p}.norm", (d,), (None,), init="zeros"),
+        "in_xz": param(f"{p}.in_xz", (d, 2 * d_in), ("embed", "inner")),
+        "in_bc": param(f"{p}.in_bc", (d, 2 * n), ("embed", None)),
+        "in_dt": param(f"{p}.in_dt", (d, hs), ("embed", "inner")),
+        "conv_x": param(f"{p}.conv_x", (cw, d_in), (None, "inner"),
+                        scale=0.2),
+        "conv_b": param(f"{p}.conv_b", (cw, n), (None, None), scale=0.2),
+        "conv_c": param(f"{p}.conv_c", (cw, n), (None, None), scale=0.2),
+        "a_log": param(f"{p}.a_log", (hs,), ("inner",), init="zeros"),
+        "dt_bias": param(f"{p}.dt_bias", (hs,), ("inner",), init="zeros"),
+        "d_skip": param(f"{p}.d_skip", (hs,), ("inner",), init="ones"),
+        "out": param(f"{p}.out", (d_in, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, kernel, cache=None):
+    """Depthwise causal conv. x: (B, S, C), kernel: (W, C)."""
+    w = kernel.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_cache = None
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = xp[:, -(w - 1):]
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i][None, None].astype(x.dtype)
+              for i in range(w))
+    return out, new_cache
+
+
+def _segsum(t):
+    """(..., L) -> (..., L, L) lower-tri cumulative sums for SSD decays."""
+    l = t.shape[-1]
+    cs = jnp.cumsum(t, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_block(w: Params, x: jnp.ndarray, cfg: ModelConfig,
+              cache: Optional[Params] = None):
+    """Mamba-2 SSD: chunked quadratic-within / recurrent-across form."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    p_hd = cfg.ssm_head_dim
+    hs = d_in // p_hd
+    nst = cfg.ssm_state
+    h = rmsnorm(x, w["norm"], cfg.rms_eps)
+
+    xz = h @ w["in_xz"].astype(h.dtype)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    bc = h @ w["in_bc"].astype(h.dtype)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(h @ w["in_dt"].astype(h.dtype)
+                         + w["dt_bias"].astype(h.dtype))    # (b, s, hs)
+    a = -jnp.exp(w["a_log"].astype(jnp.float32))            # (hs,)
+
+    conv_cache_in = cache.get("conv") if cache is not None else None
+    if conv_cache_in is not None:
+        cx, cb, cc = (conv_cache_in[..., :d_in],
+                      conv_cache_in[..., d_in:d_in + nst],
+                      conv_cache_in[..., d_in + nst:])
+    else:
+        cx = cb = cc = None
+    xc, ncx = _causal_conv(jax.nn.silu(xc), w["conv_x"], cx)
+    bmat, ncb = _causal_conv(bmat, w["conv_b"], cb)
+    cmat, ncc = _causal_conv(cmat, w["conv_c"], cc)
+    new_conv = (jnp.concatenate([ncx, ncb, ncc], axis=-1)
+                if cache is not None else None)
+
+    xh = xc.reshape(b, s, hs, p_hd)
+    dta = dt.astype(jnp.float32) * a[None, None, :]          # (b, s, hs)
+    dtx = xh * dt[..., None].astype(xh.dtype)
+
+    if cache is not None and s == 1:
+        # single-step recurrence: state (b, hs, p, n)
+        st = cache["state"]
+        decay = jnp.exp(dta[:, 0])[..., None, None]          # (b, hs, 1, 1)
+        upd = jnp.einsum("bhp,bn->bhpn", dtx[:, 0].astype(jnp.float32),
+                         bmat[:, 0].astype(jnp.float32))
+        st = st * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", st, cmat[:, 0].astype(jnp.float32))
+        y = y + w["d_skip"].astype(jnp.float32)[None, :, None] \
+            * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, d_in)
+        new_cache = {"conv": new_conv, "state": st}
+    else:
+        q = min(cfg.ssm_chunk, s)
+        pad_s = (-s) % q
+        if pad_s:  # pad to a chunk multiple (zero inputs leave the state
+            # untouched: dt*x = 0 and exp(dta)=1 only scales by decay of
+            # padded steps, which we avoid by padding dta with zeros too)
+            dtx = jnp.pad(dtx, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, pad_s), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, pad_s), (0, 0)))
+            dta = jnp.pad(dta, ((0, 0), (0, pad_s), (0, 0)))
+        sp = s + pad_s
+        nc = sp // q
+        xb = dtx.reshape(b, nc, q, hs, p_hd)
+        bb = bmat.reshape(b, nc, q, nst)
+        cb_ = cmat.reshape(b, nc, q, nst)
+        ab = dta.reshape(b, nc, q, hs)
+
+        lmat = jnp.exp(_segsum(ab.transpose(0, 1, 3, 2)))    # (b,nc,hs,q,q)
+        scores = jnp.einsum("bcqn,bckn->bcqk",
+                            cb_.astype(jnp.float32),
+                            bb.astype(jnp.float32))          # (b,nc,q,q)
+        y_diag = jnp.einsum("bchqk,bckhp->bcqhp",
+                            lmat * scores[:, :, None, :, :],
+                            xb.astype(jnp.float32))
+        # chunk summaries
+        a_cum = jnp.cumsum(ab, axis=2)                       # (b,nc,q,hs)
+        a_tot = a_cum[:, :, -1]                              # (b,nc,hs)
+        decay_out = jnp.exp(a_tot[:, :, None, :] - a_cum)    # (b,nc,q,hs)
+        states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", bb.astype(jnp.float32),
+                            decay_out, xb.astype(jnp.float32))
+
+        def scan_states(carry, xs):
+            st_prev = carry
+            st_c, atot = xs
+            st = st_prev * jnp.exp(atot)[:, :, None, None] + st_c
+            return st, st_prev
+
+        st0 = (cache["state"] if cache is not None
+               else jnp.zeros((b, hs, p_hd, nst), jnp.float32))
+        st_final, prev_states = lax.scan(
+            scan_states, st0,
+            (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
+        prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,nc,hs,p,n)
+        decay_in = jnp.exp(a_cum)                            # (b,nc,q,hs)
+        y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                           cb_.astype(jnp.float32), prev_states, decay_in)
+        y = (y_diag + y_off).reshape(b, sp, hs, p_hd)[:, :s]
+        y = y + w["d_skip"].astype(jnp.float32)[None, None, :, None] \
+            * xh.astype(jnp.float32)
+        y = y.reshape(b, s, d_in)
+        new_cache = (None if cache is None
+                     else {"conv": new_conv, "state": st_final})
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ w["out"].astype(y.dtype)
+    return x + out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru(p: str, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    wdt = cfg.lru_width or d
+    cw = cfg.conv_width
+    return {
+        "norm": param(f"{p}.norm", (d,), (None,), init="zeros"),
+        "in_x": param(f"{p}.in_x", (d, wdt), ("embed", "inner")),
+        "in_y": param(f"{p}.in_y", (d, wdt), ("embed", "inner")),
+        "conv": param(f"{p}.conv", (cw, wdt), (None, "inner"), scale=0.2),
+        "w_r": param(f"{p}.w_r", (wdt, wdt), ("inner", None)),
+        "w_i": param(f"{p}.w_i", (wdt, wdt), ("inner", None)),
+        "lam": param(f"{p}.lam", (wdt,), ("inner",), init="ones"),
+        "out": param(f"{p}.out", (wdt, d), ("inner", "embed")),
+    }
+
+
+def rglru_block(w: Params, x: jnp.ndarray, cfg: ModelConfig,
+                cache: Optional[Params] = None, c_const: float = 8.0):
+    b, s, d = x.shape
+    h = rmsnorm(x, w["norm"], cfg.rms_eps)
+    xb = h @ w["in_x"].astype(h.dtype)
+    yb = jax.nn.gelu(h @ w["in_y"].astype(h.dtype), approximate=True)
+    conv_cache_in = cache.get("conv") if cache is not None else None
+    xb, new_conv = _causal_conv(xb, w["conv"], conv_cache_in)
+
+    r = jax.nn.sigmoid(xb @ w["w_r"].astype(xb.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(xb @ w["w_i"].astype(xb.dtype)).astype(jnp.float32)
+    log_a0 = -c_const * jax.nn.softplus(w["lam"].astype(jnp.float32))
+    log_a = log_a0[None, None, :] * r                       # (b, s, w)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * xb.astype(jnp.float32)
+
+    if cache is not None and s == 1:
+        hst = cache["h"] * a[:, 0] + gated[:, 0]
+        hidden = hst[:, None]
+        new_cache = {"conv": new_conv, "h": hst}
+    else:
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_sc, h_sc = lax.associative_scan(combine, (a, gated), axis=1)
+        if cache is not None:  # prefill: fold in the carried-in state
+            h_sc = h_sc + a_sc * cache["h"][:, None]
+            new_cache = {"conv": new_conv, "h": h_sc[:, -1]}
+        else:
+            new_cache = None
+        hidden = h_sc
+
+    out = (hidden.astype(x.dtype) * yb[:, :hidden.shape[1]]) \
+        @ w["out"].astype(x.dtype)
+    return x + out.astype(x.dtype), new_cache

@@ -1,0 +1,416 @@
+"""Shared model machinery: config, parameter trees with logical axes,
+norms, RoPE, and attention primitives (naive + chunked online-softmax).
+
+Parameters are plain nested-dict pytrees.  Every leaf is created through
+``param(...)`` which records *logical axis names* in a parallel tree; the
+runtime maps logical axes to mesh axes (runtime/sharding.py).  ``init_params``
+supports abstract instantiation (``jax.eval_shape``) so the 512-device
+dry-run never allocates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    vocab: int = 512
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    mlp_type: str = "swiglu"       # swiglu | geglu | gelu
+    logit_softcap: Optional[float] = None
+    attn_softcap: Optional[float] = None
+    local_window: int = 0          # >0 enables local attention layers
+    layer_pattern: str = "global"  # global | local_global | rrl | cross5
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group: int = 0             # tokens per dispatch group (0 = per-seq)
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_expand: int = 2
+    conv_width: int = 4
+    # RG-LRU (recurrentgemma)
+    lru_width: int = 0
+    # enc-dec
+    is_encdec: bool = False
+    n_enc_layers: int = 0
+    enc_ratio: int = 4             # encoder frames = seq // enc_ratio
+    # vlm
+    cross_every: int = 0           # every k-th layer is cross-attn
+    num_patches: int = 0
+    # numerics
+    rms_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    attn_impl: str = "chunked"     # chunked | naive
+    attn_chunk: int = 1024
+    attn_skip: bool = True         # causal/window/pad KV-chunk skipping
+    remat_block: int = 1           # layers per activation-checkpoint block
+    # paper integration
+    butterfly_mlp: bool = False    # ButterflyLinear fast mixing in MLP blocks
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def q_rep(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Param trees with logical axes
+# ---------------------------------------------------------------------------
+
+class Axes:
+    """Opaque leaf holding logical axis names (not a pytree container, so an
+    axes-mode init produces a tree with the same structure as the params)."""
+
+    __slots__ = ("axes",)
+
+    def __init__(self, axes):
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Axes{self.axes}"
+
+
+class _Collector:
+    """Collects (value, axes) pairs while an init function runs.
+
+    mode: "concrete" (real arrays), "abstract" (ShapeDtypeStruct — used by
+    the dry-run), "axes" (Axes leaves — used to build sharding trees).
+    """
+
+    def __init__(self, key, mode: str):
+        self.key = key
+        self.mode = mode
+        self.axes: Dict[str, Any] = {}
+
+    @property
+    def abstract(self):
+        return self.mode == "abstract"
+
+    def next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+_CURRENT: list = []
+_STACK: list = []
+
+
+class stacked:
+    """Context: every param created inside gets a leading (n, ...) "layers"
+    dimension — used to build scan-ready stacked layer parameters."""
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def __enter__(self):
+        _STACK.append(self.n)
+
+    def __exit__(self, *a):
+        _STACK.pop()
+
+
+def param(path: str, shape, axes: Tuple[Optional[str], ...],
+          init: str = "normal", scale: float = 0.02,
+          dtype=jnp.float32) -> jnp.ndarray:
+    """Create (or abstractly declare) a parameter leaf."""
+    col = _CURRENT[-1]
+    assert len(shape) == len(axes), (path, shape, axes)
+    for n in reversed(_STACK):
+        shape = (n,) + tuple(shape)
+        axes = ("layers",) + tuple(axes)
+    col.axes[path] = axes
+    if col.mode == "axes":
+        return Axes(axes)
+    if col.abstract:
+        return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+    k = col.next_key()
+    if init == "normal":
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    raise ValueError(init)
+
+
+def run_init(fn: Callable[[], Any], key, abstract: bool = False,
+             mode: Optional[str] = None):
+    """Run an init function, returning (params, axes_by_path)."""
+    if mode is None:
+        mode = "abstract" if abstract else "concrete"
+    col = _Collector(key, mode)
+    _CURRENT.append(col)
+    try:
+        params = fn()
+    finally:
+        _CURRENT.pop()
+    return params, col.axes
+
+
+# ---------------------------------------------------------------------------
+# Batch-sharding constraints
+#
+# GSPMD can lose the batch sharding through the MoE dispatch reshapes and
+# the loss chunking (observed: full-batch f32 activations replicated per
+# chip + 9.3 GiB logits all-reduces on qwen3-moe).  Step builders register
+# the batch mesh axes here; blocks pin their token-carrying tensors to
+# them at block boundaries.
+# ---------------------------------------------------------------------------
+
+_BATCH_CTX: list = [None]  # (axes tuple, total, model_axis_size) or None
+
+
+def set_batch_axes(axes, total: int, model_size: int = 1):
+    """Register batch mesh axes + model-axis size for sharding
+    constraints (trace-time)."""
+    _BATCH_CTX[0] = (tuple(axes), total, model_size) if axes else None
+
+
+def _apply_spec(x, spec):
+    try:
+        from jax.sharding import PartitionSpec
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (plain local execution)
+
+
+def constrain_tokens(x, dim: int = 0):
+    """Pin x's token dimension to the batch axes (no-op when unset,
+    when the dim does not divide, or outside a mesh context)."""
+    ctx = _BATCH_CTX[0]
+    if ctx is None:
+        return x
+    axes, total, _ = ctx
+    if total <= 1 or x.shape[dim] % total != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = axes if len(axes) > 1 else axes[0]
+    return _apply_spec(x, spec)
+
+
+def constrain_dims(x, dims):
+    """Pin dims to named roles: {dim: "batch" | "model"}.  Skips any dim
+    that does not divide its axis size; no-op without registration."""
+    ctx = _BATCH_CTX[0]
+    if ctx is None:
+        return x
+    axes, total, model_size = ctx
+    spec = [None] * x.ndim
+    ok = False
+    for dim, role in dims.items():
+        if role == "batch" and total > 1 and x.shape[dim] % total == 0:
+            spec[dim] = axes if len(axes) > 1 else axes[0]
+            ok = True
+        elif (role == "model" and model_size > 1
+              and x.shape[dim] % model_size == 0):
+            spec[dim] = "model"
+            ok = True
+    return _apply_spec(x, spec) if ok else x
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """RMSNorm with f32 statistics but no f32 copy of x.
+
+    Computing ``x.astype(f32)`` here is a memory trap: under a remat'd layer
+    scan, XLA hoists the convert of the *stacked* residuals out of the
+    backward loop, materializing a full f32 copy of every layer's input
+    (observed: +10.5 GiB/chip on qwen2-1.5b train_4k).  Instead the second
+    moment accumulates in f32 via dot, and only the per-position scale is
+    rounded to x.dtype.
+    """
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    scale = jax.lax.rsqrt(var[..., None] + eps)
+    mult = (scale * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+    return x * mult
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int,
+                theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (...,) int -> (sin, cos) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray,
+               cos: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd); sin/cos: (B, S, hd//2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :].astype(jnp.float32)
+    cos = cos[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin,
+                            x2f * cos + x1f * sin], axis=-1).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / local / cross; naive + chunked online softmax)
+# ---------------------------------------------------------------------------
+
+_MASK_VALUE = -1e30
+
+
+def _scores(q, k, scale, cap):
+    """q: (B,Sq,KV,R,hd) k: (B,Sk,KV,hd) -> (B,KV,R,Sq,Sk) in f32."""
+    s = jnp.einsum("bqkrh,bskh->bkrqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    return softcap(s, cap)
+
+
+_PAD_POS = 2 ** 30  # sentinel position for padded / empty KV slots
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    qp = q_pos[:, :, None]
+    kp = k_pos[:, None, :]
+    m = kp < _PAD_POS  # padded KV chunks / empty cache slots never attend
+    if causal:
+        m = m & (kp <= qp)
+    if window > 0:
+        m = m & (kp > qp - window)
+    return m  # (B, Sq, Sk)
+
+
+def attention(q, k, v, q_pos, k_pos, *, causal=True, window=0, cap=None,
+              impl="chunked", chunk=1024, skip=True):
+    """GQA attention.
+
+    q: (B, Sq, H, hd), k/v: (B, Sk, KV, hd).  Returns (B, Sq, H, hd).
+    ``impl="chunked"`` streams KV in chunks with an online softmax (bounded
+    memory — the pure-XLA analogue of flash attention; DESIGN.md §4).
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    if impl == "naive" or k.shape[1] <= chunk:
+        s = _scores(qg, k, scale, cap)
+        m = _mask(q_pos, k_pos, causal, window)
+        s = jnp.where(m[:, None, None, :, :], s, _MASK_VALUE)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkrqs,bskh->bqkrh", p.astype(v.dtype), v)
+        return o.reshape(b, sq, h, hd)
+
+    # double-blocked online softmax: outer sequential map over Q blocks,
+    # inner scan over KV chunks, remat on both levels — live score memory is
+    # O(q_block x kv_chunk) instead of O(Sq x Sk): the flash-attention
+    # tiling, expressed in pure XLA (the Pallas analogue runs on-TPU).
+    sk = k.shape[1]
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    posp = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2 ** 30)
+    kc = kp.reshape(b, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    pc = posp.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    qb = min(chunk, sq)
+    n_qb = (sq + qb - 1) // qb
+    pad_q = n_qb * qb - sq
+    qp_ = jnp.pad(qg, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=0)
+    qblk = qp_.reshape(b, n_qb, qb, kv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpos_blk = qpos_p.reshape(b, n_qb, qb).transpose(1, 0, 2)
+
+    def one_q_block(xs):
+        qgb, qposb = xs                                 # (B,qb,KV,R,hd)
+
+        def compute(carry, ys):
+            m_run, l_run, acc = carry
+            kch, vch, pch = ys
+            s = _scores(qgb, kch, scale, cap)           # (B,KV,R,qb,C)
+            msk = _mask(qposb, pch, causal, window)
+            s = jnp.where(msk[:, None, None, :, :], s, _MASK_VALUE)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_run = l_run * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkrqs,bskh->bqkrh", p.astype(vch.dtype), vch)
+            acc = (acc * alpha.transpose(0, 3, 1, 2)[..., None]
+                   .astype(acc.dtype) + pv)
+            return (m_new, l_run, acc)
+
+        def step(carry, ys):
+            kch, vch, pch = ys
+            if not skip:
+                return compute(carry, ys), None
+            # causal chunk skipping: a KV chunk entirely in the future of
+            # every query (or entirely outside the local window, or pure
+            # padding) contributes nothing — skip its score tile.  Halves
+            # causal-attention compute at runtime (the roofline analyzer
+            # reports the unskipped upper bound; see EXPERIMENTS.md).
+            needed = pch.min() < _PAD_POS
+            if causal:
+                needed &= pch.min() <= qposb.max()
+            if window > 0:
+                needed &= pch.max() > qposb.min() - window
+            out = lax.cond(needed, lambda c: compute(c, ys),
+                           lambda c: c, carry)
+            return out, None
+
+        m0 = jnp.full((b, kv, rep, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, rep, qb), jnp.float32)
+        a0 = jnp.zeros((b, qb, kv, rep, hd), jnp.float32)
+        stepc = jax.checkpoint(step, prevent_cse=False)
+        (m_f, l_f, acc), _ = lax.scan(stepc, (m0, l0, a0), (kc, vc, pc))
+        denom = l_f.transpose(0, 3, 1, 2)[..., None]
+        return (acc / jnp.maximum(denom, 1e-30)).astype(q.dtype)
+
+    if n_qb == 1:
+        out = one_q_block((qblk[0], qpos_blk[0]))       # (B,qb,KV,R,hd)
+    else:
+        blk = jax.checkpoint(one_q_block, prevent_cse=False)
+        outs = lax.map(blk, (qblk, qpos_blk))           # (nq,B,qb,KV,R,hd)
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(
+            b, n_qb * qb, kv, rep, hd)
+    out = out[:, :sq] if pad_q else out.reshape(b, sq, kv, rep, hd)
+    return out.reshape(b, sq, h, hd)

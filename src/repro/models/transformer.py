@@ -1,0 +1,483 @@
+"""Unified LM assembly covering all 10 assigned architecture families.
+
+Layer stacks are organized into *groups* of identical super-layers, scanned
+with ``lax.scan`` (+ optional remat) so HLO size stays O(1) in depth:
+
+  family    groups (super-layer contents)
+  dense     [L x (attn + mlp)]
+  moe       [L x (attn + moe)]
+  local_global (gemma2)  [L/2 x (local-attn + mlp + global-attn + mlp)]
+  rrl (recurrentgemma)   [L/3 x (rglru+mlp, rglru+mlp, local-attn+mlp)]
+                          + remainder rglru+mlp layers
+  ssm (mamba2)           [L x ssd]
+  vlm (cross5)           [L/5 x (4 x (attn+mlp) + cross-attn + mlp)]
+  audio (enc-dec)        encoder [Lenc x (bidir attn + mlp)],
+                          decoder [L x (attn + cross + mlp)]
+
+API (all pure functions):
+  init_params(cfg, key, abstract)         -> (params, axes)
+  forward(params, cfg, batch)             -> logits (B, S, V)
+  loss_fn(params, cfg, batch)             -> (loss, metrics)
+  init_cache(cfg, batch, max_len, ...)    -> (cache, axes)
+  decode_step(params, cfg, cache, batch)  -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import blocks
+from .common import (ModelConfig, constrain_tokens, param, rmsnorm,
+                     run_init, softcap, stacked)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Group structure per family
+# ---------------------------------------------------------------------------
+
+def group_plan(cfg: ModelConfig):
+    """Returns [(group_name, super_layer_count)] for the decoder stack."""
+    pat = cfg.layer_pattern
+    if pat == "global":
+        return [("dense" if cfg.n_experts == 0 else "moe", cfg.n_layers)]
+    if pat == "local_global":
+        assert cfg.n_layers % 2 == 0
+        return [("lg", cfg.n_layers // 2)]
+    if pat == "rrl":
+        main, rem = divmod(cfg.n_layers, 3)
+        plan = [("rrl", main)]
+        if rem:
+            plan.append(("rec_extra", rem))
+        return plan
+    if pat == "cross5":
+        assert cfg.n_layers % 5 == 0
+        return [("cross5", cfg.n_layers // 5)]
+    if pat == "ssm":
+        return [("ssd", cfg.n_layers)]
+    if pat == "encdec":
+        return [("dec", cfg.n_layers)]
+    raise ValueError(pat)
+
+
+def _init_group(name: str, cfg: ModelConfig) -> Params:
+    if name == "dense":
+        return {"attn": blocks.init_attn(f"{name}.attn", cfg),
+                "mlp": blocks.init_mlp(f"{name}.mlp", cfg)}
+    if name == "moe":
+        return {"attn": blocks.init_attn(f"{name}.attn", cfg),
+                "moe": blocks.init_moe(f"{name}.moe", cfg)}
+    if name == "lg":
+        return {"attn_l": blocks.init_attn(f"{name}.attn_l", cfg),
+                "mlp_l": blocks.init_mlp(f"{name}.mlp_l", cfg),
+                "attn_g": blocks.init_attn(f"{name}.attn_g", cfg),
+                "mlp_g": blocks.init_mlp(f"{name}.mlp_g", cfg)}
+    if name == "rrl":
+        return {"rec1": blocks.init_rglru(f"{name}.rec1", cfg),
+                "mlp1": blocks.init_mlp(f"{name}.mlp1", cfg),
+                "rec2": blocks.init_rglru(f"{name}.rec2", cfg),
+                "mlp2": blocks.init_mlp(f"{name}.mlp2", cfg),
+                "attn": blocks.init_attn(f"{name}.attn", cfg),
+                "mlp3": blocks.init_mlp(f"{name}.mlp3", cfg)}
+    if name == "rec_extra":
+        return {"rec": blocks.init_rglru(f"{name}.rec", cfg),
+                "mlp": blocks.init_mlp(f"{name}.mlp", cfg)}
+    if name == "cross5":
+        out = {}
+        for t in range(4):
+            out[f"attn{t}"] = blocks.init_attn(f"{name}.attn{t}", cfg)
+            out[f"mlp{t}"] = blocks.init_mlp(f"{name}.mlp{t}", cfg)
+        out["cross"] = blocks.init_cross_attn(f"{name}.cross", cfg)
+        out["mlp_c"] = blocks.init_mlp(f"{name}.mlp_c", cfg)
+        return out
+    if name == "ssd":
+        return {"ssd": blocks.init_ssd(f"{name}.ssd", cfg)}
+    if name == "enc":
+        return {"attn": blocks.init_attn(f"{name}.attn", cfg),
+                "mlp": blocks.init_mlp(f"{name}.mlp", cfg)}
+    if name == "dec":
+        return {"attn": blocks.init_attn(f"{name}.attn", cfg),
+                "cross": blocks.init_cross_attn(f"{name}.cross", cfg),
+                "mlp": blocks.init_mlp(f"{name}.mlp", cfg)}
+    raise ValueError(name)
+
+
+def init_params(cfg: ModelConfig, key=None, abstract: bool = False,
+                mode: Optional[str] = None) -> Tuple[Params, Dict[str, Any]]:
+    """mode: None->concrete/abstract per flag; "axes"->Axes-leaf tree with
+    the same structure (for sharding rules)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def build():
+        p: Params = {
+            "embed": param("embed", (cfg.vocab, cfg.d_model),
+                           ("vocab", "embed"), scale=0.01),
+            "final_norm": param("final_norm", (cfg.d_model,), (None,),
+                                init="zeros"),
+            "lm_head": param("lm_head", (cfg.d_model, cfg.vocab),
+                             ("embed", "vocab"), scale=0.01),
+            "groups": {},
+        }
+        for name, count in group_plan(cfg):
+            with stacked(count):
+                p["groups"][name] = _init_group(name, cfg)
+        if cfg.is_encdec:
+            with stacked(cfg.n_enc_layers):
+                p["encoder"] = _init_group("enc", cfg)
+            p["enc_norm"] = param("enc_norm", (cfg.d_model,), (None,),
+                                  init="zeros")
+        return p
+
+    return run_init(build, key, abstract, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Super-layer apply functions (training/prefill: cache=None)
+# ---------------------------------------------------------------------------
+
+def _super_layer(name: str, cfg: ModelConfig, w: Params, x, *, positions,
+                 memory=None, cache=None):
+    """Returns (x, new_cache)."""
+    nc: Dict[str, Any] = {}
+
+    def attn(key, xx, window=0, ca=None):
+        xx, c = blocks.attn_block(w[key], xx, cfg, positions=positions,
+                                  window=window, cache=ca)
+        return xx, c
+
+    if name == "dense":
+        x, c = attn("attn", x, 0, None if cache is None else cache["attn"])
+        nc["attn"] = c
+        x = blocks.mlp_block(w["mlp"], x, cfg)
+    elif name == "moe":
+        x, c = attn("attn", x, 0, None if cache is None else cache["attn"])
+        nc["attn"] = c
+        x = blocks.moe_block(w["moe"], x, cfg)
+    elif name == "lg":
+        x, c1 = attn("attn_l", x, cfg.local_window,
+                     None if cache is None else cache["attn_l"])
+        x = blocks.mlp_block(w["mlp_l"], x, cfg)
+        x, c2 = attn("attn_g", x, 0,
+                     None if cache is None else cache["attn_g"])
+        x = blocks.mlp_block(w["mlp_g"], x, cfg)
+        nc = {"attn_l": c1, "attn_g": c2}
+    elif name == "rrl":
+        x, c1 = blocks.rglru_block(w["rec1"], x, cfg,
+                                   None if cache is None else cache["rec1"])
+        x = blocks.mlp_block(w["mlp1"], x, cfg)
+        x, c2 = blocks.rglru_block(w["rec2"], x, cfg,
+                                   None if cache is None else cache["rec2"])
+        x = blocks.mlp_block(w["mlp2"], x, cfg)
+        x, c3 = attn("attn", x, cfg.local_window,
+                     None if cache is None else cache["attn"])
+        x = blocks.mlp_block(w["mlp3"], x, cfg)
+        nc = {"rec1": c1, "rec2": c2, "attn": c3}
+    elif name == "rec_extra":
+        x, c = blocks.rglru_block(w["rec"], x, cfg,
+                                  None if cache is None else cache["rec"])
+        x = blocks.mlp_block(w["mlp"], x, cfg)
+        nc = {"rec": c}
+    elif name == "cross5":
+        for t in range(4):
+            x, c = attn(f"attn{t}", x, 0,
+                        None if cache is None else cache[f"attn{t}"])
+            nc[f"attn{t}"] = c
+            x = blocks.mlp_block(w[f"mlp{t}"], x, cfg)
+        x = blocks.cross_attn_block(w["cross"], x, memory, cfg)
+        x = blocks.mlp_block(w["mlp_c"], x, cfg)
+    elif name == "ssd":
+        x, c = blocks.ssd_block(w["ssd"], x, cfg,
+                                None if cache is None else cache["ssd"])
+        nc["ssd"] = c
+    elif name == "enc":
+        x, _ = blocks.attn_block(w["attn"], x, cfg, positions=positions,
+                                 window=0, causal=False, cache=None)
+        x = blocks.mlp_block(w["mlp"], x, cfg)
+    elif name == "dec":
+        x, c = attn("attn", x, 0, None if cache is None else cache["attn"])
+        nc["attn"] = c
+        x = blocks.cross_attn_block(w["cross"], x, memory, cfg)
+        x = blocks.mlp_block(w["mlp"], x, cfg)
+    else:
+        raise ValueError(name)
+    return x, (nc if cache is not None else None)
+
+
+def _scan_group(name, cfg, gparams, x, *, positions, memory=None,
+                cache=None, remat=True):
+    # k-layer checkpoint blocks (training path): saved residual stack is
+    # L/k carries instead of L; the k-1 inner carries recompute in backward.
+    k = max(int(cfg.remat_block), 1)
+    count = jax.tree.leaves(gparams)[0].shape[0]
+    if cache is None and remat and k > 1 and count % k == 0:
+        blocked = jax.tree.map(
+            lambda a: a.reshape((count // k, k) + a.shape[1:]), gparams)
+
+        def block_body(xc, wsb):
+            xc = constrain_tokens(xc)
+
+            def inner(xc2, ws):
+                out, _ = _super_layer(name, cfg, ws, xc2,
+                                      positions=positions, memory=memory,
+                                      cache=None)
+                return constrain_tokens(out), None
+
+            # nested remat: the block backward recomputes one inner layer
+            # at a time (without this, differentiating the inner scan keeps
+            # k layers' attention transients live simultaneously)
+            inner = jax.checkpoint(inner, prevent_cse=False)
+            out, _ = lax.scan(inner, xc, wsb)
+            return out, None
+
+        block_body = jax.checkpoint(block_body, prevent_cse=False)
+        x, _ = lax.scan(block_body, x, blocked)
+        return x, None
+
+    def body(xc, ws):
+        xc = constrain_tokens(xc)
+        if cache is None:
+            wl = ws
+            out, _ = _super_layer(name, cfg, wl, xc, positions=positions,
+                                  memory=memory, cache=None)
+            return constrain_tokens(out), None
+        wl, cl = ws
+        out, c2 = _super_layer(name, cfg, wl, xc, positions=positions,
+                               memory=memory, cache=cl)
+        return constrain_tokens(out), c2
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = gparams if cache is None else (gparams, cache)
+    x, new_cache = lax.scan(body, x, xs)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def _encode(params, cfg, memory_in, remat=True):
+    """Audio encoder: bidirectional stack over frame embeddings."""
+    x = memory_in.astype(cfg.dtype)
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], x.shape[:2])
+    x, _ = _scan_group("enc", cfg, params["encoder"], x,
+                       positions=positions, remat=remat)
+    return rmsnorm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+                   remat: bool = True) -> jnp.ndarray:
+    """Final-normed hidden states (B, S, D) — the pre-projection forward."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens] * float(np.sqrt(cfg.d_model))
+    x = constrain_tokens(x)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    memory = batch.get("memory")
+    if cfg.is_encdec:
+        memory = _encode(params, cfg, memory, remat=remat)
+    elif memory is not None:
+        memory = memory.astype(cfg.dtype)
+    for name, _count in group_plan(cfg):
+        x, _ = _scan_group(name, cfg, params["groups"][name], x,
+                           positions=positions, memory=memory, remat=remat)
+    return rmsnorm(x, params["final_norm"], cfg.rms_eps)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            remat: bool = True) -> jnp.ndarray:
+    x = forward_hidden(params, cfg, batch, remat=remat)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return softcap(logits, cfg.logit_softcap)
+
+
+_LOSS_CHUNK = 1024
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            remat: bool = True, loss_chunk: int = _LOSS_CHUNK):
+    """Next-token NLL with a remat'd scan over sequence chunks.
+
+    The (B, S, V) float32 logits tensor is never materialized: each chunk
+    projects (B, C, D) -> (B, C, V), reduces to per-token NLL, and the
+    backward pass recomputes the chunk's logits (memory O(B*C*V) live
+    instead of O(B*S*V) x several copies — the vocab-parallel cross-entropy
+    trick, crucial at 150k-250k vocabs).
+    """
+    x = forward_hidden(params, cfg, batch, remat=remat)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    mask = batch.get("mask")
+    mask = (jnp.ones((b, s), jnp.float32) if mask is None
+            else mask.astype(jnp.float32))
+    # shift: hidden at position t predicts token t+1
+    x = x[:, :-1]
+    targets = tokens[:, 1:]
+    mask = mask[:, 1:]
+    sm = s - 1
+    c = min(loss_chunk, sm)
+    pad = (-sm) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (sm + pad) // c
+    xc = constrain_tokens(x.reshape(b, nc, c, -1).transpose(1, 0, 2, 3),
+                          dim=1)
+    tc = constrain_tokens(targets.reshape(b, nc, c).transpose(1, 0, 2),
+                          dim=1)
+    mc = constrain_tokens(mask.reshape(b, nc, c).transpose(1, 0, 2), dim=1)
+    head = params["lm_head"]
+
+    def chunk_nll(carry, xs):
+        xx, tt, mm = xs
+        logits = jnp.einsum("bcd,dv->bcv", xx, head.astype(xx.dtype))
+        logits = softcap(logits, cfg.logit_softcap).astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, tt[..., None], axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + (nll * mm).sum(), cnt + mm.sum()), None
+
+    body = jax.checkpoint(chunk_nll, prevent_cse=False)
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)),
+                             (xc, tc, mc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init + decode step
+# ---------------------------------------------------------------------------
+
+def _cache_entry(name, cfg, count, b, max_len, col):
+    """Abstract/zeros cache for one group (stacked on `count`)."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    d_in = cfg.ssm_expand * cfg.d_model
+    hs = d_in // cfg.ssm_head_dim
+    wdt = cfg.lru_width or cfg.d_model
+    cw = cfg.conv_width - 1
+    loc = min(max_len, cfg.local_window) if cfg.local_window else max_len
+
+    def arr(shape, axes, dtype=jnp.bfloat16, fill=0):
+        col.axes.append(axes)
+        if col.mode == "axes":
+            from .common import Axes
+            return Axes(axes)
+        if col.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.full(shape, fill, dtype)
+
+    def attn_c(length):
+        return {"k": arr((count, b, length, kv, hd),
+                         ("layers", "batch", "kv_seq", "kv_heads", None)),
+                "v": arr((count, b, length, kv, hd),
+                         ("layers", "batch", "kv_seq", "kv_heads", None)),
+                # stored positions drive masking; empty slots sit at +2^30
+                # so the causal mask excludes them
+                "pos": arr((count, b, length),
+                           ("layers", "batch", "kv_seq"), jnp.int32,
+                           fill=2 ** 30)}
+
+    def rglru_c():
+        return {"conv": arr((count, b, cw, wdt),
+                            ("layers", "batch", None, "inner")),
+                "h": arr((count, b, wdt), ("layers", "batch", "inner"),
+                         jnp.float32)}
+
+    if name in ("dense", "moe", "dec"):
+        return {"attn": attn_c(max_len)}
+    if name == "lg":
+        return {"attn_l": attn_c(loc), "attn_g": attn_c(max_len)}
+    if name == "rrl":
+        return {"rec1": rglru_c(), "rec2": rglru_c(), "attn": attn_c(loc)}
+    if name == "rec_extra":
+        return {"rec": rglru_c()}
+    if name == "cross5":
+        return {f"attn{t}": attn_c(max_len) for t in range(4)}
+    if name == "ssd":
+        return {"ssd": {
+            "conv": arr((count, b, cw, d_in + 2 * cfg.ssm_state),
+                        ("layers", "batch", None, "inner")),
+            "state": arr((count, b, hs, cfg.ssm_head_dim, cfg.ssm_state),
+                         ("layers", "batch", "inner", None, None),
+                         jnp.float32)}}
+    raise ValueError(name)
+
+
+class _CacheCol:
+    def __init__(self, mode):
+        self.mode = mode
+        self.axes = []
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               abstract: bool = False, mode: str = None):
+    """Returns (cache, axes-list). mode in {concrete, abstract, axes}."""
+    if mode is None:
+        mode = "abstract" if abstract else "concrete"
+    col = _CacheCol(mode)
+    cache = {}
+    for name, count in group_plan(cfg):
+        cache[name] = _cache_entry(name, cfg, count, batch_size, max_len,
+                                   col)
+    return cache, col.axes
+
+
+def prefill(params: Params, cfg: ModelConfig, cache, batch,
+            remat: bool = True):
+    """Process a prompt, returning (last-position logits, filled cache).
+
+    For enc-dec configs the returned ``memory`` (encoded frames) is also
+    produced so decode steps can reuse it without re-encoding.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens] * float(np.sqrt(cfg.d_model))
+    x = constrain_tokens(x)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    memory = batch.get("memory")
+    if cfg.is_encdec:
+        memory = _encode(params, cfg, memory, remat=remat)
+    elif memory is not None:
+        memory = memory.astype(cfg.dtype)
+    new_cache = {}
+    for name, _count in group_plan(cfg):
+        x, nc = _scan_group(name, cfg, params["groups"][name], x,
+                            positions=positions, memory=memory,
+                            cache=cache[name], remat=remat)
+        new_cache[name] = nc
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return softcap(logits, cfg.logit_softcap), new_cache, memory
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache, batch):
+    """One-token decode.  batch: {"token": (B,1) int32, "pos": (B,) int32,
+    optional "memory" (pre-encoded for enc-dec)}.  Local-attention caches
+    are ring buffers indexed by pos % window."""
+    tok = batch["token"]
+    pos = batch["pos"]
+    b = tok.shape[0]
+    x = params["embed"].astype(cfg.dtype)[tok] * float(np.sqrt(cfg.d_model))
+    positions = pos[:, None]
+    memory = batch.get("memory")
+    if memory is not None:
+        memory = memory.astype(cfg.dtype)
+    new_cache = {}
+    for name, _count in group_plan(cfg):
+        x, nc = _scan_group(name, cfg, params["groups"][name], x,
+                            positions=positions, memory=memory,
+                            cache=cache[name], remat=False)
+        new_cache[name] = nc
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return softcap(logits, cfg.logit_softcap), new_cache

@@ -1,0 +1,95 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule.
+
+Optimizer state mirrors the parameter tree (mu/nu share the params'
+shardings — ZeRO-style when FSDP is enabled, since the "embed" axis of the
+params is data-sharded and the moments inherit it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    zeros2 = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros2)
+
+
+def init_abstract(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, moment_dtype), params)
+    zeros2 = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, moment_dtype), params)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=zeros, nu=zeros2)
+
+
+def state_axes(params_axes) -> "AdamWState":
+    """Axes tree for the optimizer state (moments mirror param axes)."""
+    from repro.models.common import Axes
+    copy = lambda t: jax.tree.map(lambda a: a, t,
+                                  is_leaf=lambda x: isinstance(x, Axes))
+    return AdamWState(step=Axes(()), mu=copy(params_axes),
+                      nu=copy(params_axes))
+
+
+from repro.models.common import Axes  # noqa: E402 (cycle-safe tail import)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1, max_grad_norm=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        mdt = m.dtype
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2.astype(mdt), v2.astype(mdt)
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), {"grad_norm": gnorm}

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see ONE CPU device (the dry-run's 512-device forcing is local
+# to repro.launch.dryrun, never global).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,79 @@
+"""Checkpoint store: atomic commit, resume, retention, resharding path."""
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 3)),
+                                        jnp.float32),
+                       "b": jnp.asarray(rng.standard_normal(3),
+                                        jnp.float32)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    state = _state(0)
+    save_checkpoint(tmp_path, 10, state, metadata={"mesh": 1})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    restored, step, meta = restore_checkpoint(tmp_path, like)
+    assert step == 10 and meta["mesh"] == 1
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_uncommitted_checkpoints_ignored(tmp_path):
+    state = _state(1)
+    save_checkpoint(tmp_path, 5, state)
+    # simulate a crashed writer: dir exists but no COMMITTED marker
+    (tmp_path / "step_000000009").mkdir()
+    assert latest_step(tmp_path) == 5
+
+
+def test_latest_step_picks_max(tmp_path):
+    for s in (3, 12, 7):
+        save_checkpoint(tmp_path, s, _state(s))
+    assert latest_step(tmp_path) == 12
+
+
+def test_manager_retention_and_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s))
+    mgr.wait()
+    committed = sorted(p.name for p in tmp_path.iterdir()
+                       if p.is_dir() and
+                       (tmp_path / f"{p.name}.COMMITTED").exists())
+    assert committed == ["step_000000003", "step_000000004"]
+
+
+def test_restore_casts_dtype(tmp_path):
+    state = {"w": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(tmp_path, 1, state)
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    restored, _, _ = restore_checkpoint(tmp_path, like)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(tmp_path / "nope", {"w": jnp.zeros(1)})
+
+
+def test_manager_restore_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    st = _state(9)
+    mgr.save(42, st, metadata={"arch": "x"}, blocking=True)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    restored, step, meta = mgr.restore_latest(like)
+    assert step == 42 and meta["arch"] == "x"
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(st["params"]["w"]))

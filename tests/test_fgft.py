@@ -1,0 +1,89 @@
+"""Fast graph Fourier transform (the paper's §5 application)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_fgft, laplacian, relative_error
+from repro.graphs import (community_graph, erdos_renyi, sensor_graph,
+                          directed_variant)
+
+
+def test_laplacian_properties():
+    a = erdos_renyi(24, seed=0)
+    lap = laplacian(a)
+    np.testing.assert_allclose(lap.sum(axis=1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(lap, lap.T)
+    ev = np.linalg.eigvalsh(lap)
+    assert ev.min() > -1e-4  # PSD
+
+
+def test_undirected_fgft_accuracy_curve():
+    a = community_graph(48, seed=1)
+    lap = laplacian(a)
+    den = float((lap * lap).sum())
+    errs = []
+    for alpha in (0.5, 2.0):
+        g = int(alpha * 48 * np.log2(48))
+        f = build_fgft(jnp.asarray(lap), g, directed=False, n_iter=3)
+        errs.append(relative_error(jnp.asarray(lap), f))
+    assert errs[1] < errs[0]
+    assert errs[1] < 0.5
+
+
+def test_fgft_analysis_synthesis_roundtrip():
+    a = sensor_graph(32, seed=2)
+    lap = laplacian(a)
+    f = build_fgft(jnp.asarray(lap), 64, directed=False, n_iter=2)
+    x = np.random.default_rng(3).standard_normal((5, 32)).astype(np.float32)
+    xh = f.analysis(jnp.asarray(x))
+    x2 = f.synthesis(xh)
+    np.testing.assert_allclose(np.asarray(x2), x, atol=1e-4)
+
+
+def test_fgft_filter_matches_dense():
+    a = erdos_renyi(24, p=0.2, seed=4)
+    lap = laplacian(a)
+    f = build_fgft(jnp.asarray(lap), 48, directed=False, n_iter=2)
+    from repro.core import g_to_dense
+    u = np.asarray(g_to_dense(f.g_factors, 24))
+    h = lambda lam: 1.0 / (1.0 + lam)
+    dense_filter = u @ np.diag(h(np.asarray(f.spectrum))) @ u.T
+    x = np.random.default_rng(5).standard_normal((3, 24)).astype(np.float32)
+    y = f.filter(jnp.asarray(x), h)
+    np.testing.assert_allclose(np.asarray(y), x @ dense_filter.T,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_directed_fgft():
+    a = directed_variant(erdos_renyi(24, p=0.25, seed=6), seed=6)
+    lap = laplacian(a)
+    assert not np.allclose(lap, lap.T)  # genuinely directed
+    f = build_fgft(jnp.asarray(lap), 96, directed=True, n_iter=3)
+    rel = relative_error(jnp.asarray(lap), f)
+    assert rel < 0.9
+    # analysis/synthesis invert each other (T then T^{-1})
+    x = np.random.default_rng(7).standard_normal((4, 24)).astype(np.float32)
+    x2 = f.synthesis(f.analysis(jnp.asarray(x)))
+    np.testing.assert_allclose(np.asarray(x2), x, rtol=1e-3, atol=1e-3)
+
+
+def test_flops_accounting():
+    a = erdos_renyi(16, seed=8)
+    lap = laplacian(a)
+    f = build_fgft(jnp.asarray(lap), 32, directed=False, n_iter=1)
+    assert f.flops_per_matvec() == 6 * 32
+    fd = build_fgft(jnp.asarray(laplacian(directed_variant(a))), 32,
+                    directed=True, n_iter=1)
+    kinds = np.asarray(fd.t_factors.kind)
+    want = int((kinds == 0).sum() + 2 * (kinds == 1).sum())
+    assert fd.flops_per_matvec() == want
+    assert fd.flops_per_matvec() <= 2 * 32  # <= 2 ops per transform
+
+
+def test_directed_cheaper_than_undirected_per_transform():
+    """T-transforms: 2 ops/dof vs 6 ops/dof for G (paper §3.2)."""
+    a = erdos_renyi(16, seed=9)
+    lu = build_fgft(jnp.asarray(laplacian(a)), 30, directed=False, n_iter=1)
+    ld = build_fgft(jnp.asarray(laplacian(directed_variant(a))), 30,
+                    directed=True, n_iter=1)
+    assert ld.flops_per_matvec() < lu.flops_per_matvec()

@@ -1,0 +1,136 @@
+"""AdamW, schedule, clipping, and butterfly gradient compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, compress
+
+
+def test_adamw_converges_on_quadratic():
+    target = jnp.asarray(np.random.default_rng(0)
+                         .standard_normal(32).astype(np.float32))
+    params = {"w": jnp.zeros(32)}
+    opt = adamw.init(params)
+
+    @jax.jit
+    def step(p, o):
+        g = jax.grad(lambda pp: jnp.sum((pp["w"] - target) ** 2))(p)
+        return adamw.update(g, o, p, lr=0.05, weight_decay=0.0)[:2]
+
+    for _ in range(200):
+        params, opt = step(params, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full(4, 10.0), "b": jnp.full(9, 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(tree, 1.0)
+    got = float(adamw.global_norm(clipped))
+    np.testing.assert_allclose(got, 1.0, rtol=1e-5)
+    assert float(norm) > 1.0
+    small = {"a": jnp.full(4, 1e-3)}
+    kept, _ = adamw.clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(kept["a"]),
+                               np.asarray(small["a"]))
+
+
+def test_warmup_cosine_schedule():
+    lr0 = adamw.warmup_cosine(jnp.asarray(0), peak_lr=1e-3, warmup=10,
+                              total=100)
+    lr_peak = adamw.warmup_cosine(jnp.asarray(10), peak_lr=1e-3, warmup=10,
+                                  total=100)
+    lr_end = adamw.warmup_cosine(jnp.asarray(100), peak_lr=1e-3, warmup=10,
+                                 total=100)
+    assert float(lr0) == 0.0
+    np.testing.assert_allclose(float(lr_peak), 1e-3, rtol=1e-5)
+    np.testing.assert_allclose(float(lr_end), 1e-4, rtol=1e-3)  # floor 0.1
+
+
+def test_moment_dtype():
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    opt = adamw.init(params, moment_dtype=jnp.bfloat16)
+    assert opt.mu["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((8,), jnp.float32)}
+    p2, o2, _ = adamw.update(g, opt, params, lr=1e-2)
+    assert o2.mu["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == jnp.float32
+
+
+def test_butterfly_basis_is_orthonormal():
+    spec = compress.make_spec(width=64, ratio=1.0)
+    x = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal((5, 64)).astype(np.float32))
+    coeffs = compress._butterfly(spec.theta, x, 64, adjoint=True)
+    back = compress._butterfly(spec.theta, coeffs, 64, adjoint=False)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-5)
+    # energy preserved
+    np.testing.assert_allclose(float(jnp.sum(coeffs ** 2)),
+                               float(jnp.sum(x ** 2)), rtol=1e-5)
+
+
+def test_compress_roundtrip_identity_at_ratio_1():
+    spec = compress.make_spec(width=64, ratio=1.0)
+    leaf = jnp.asarray(np.random.default_rng(2)
+                       .standard_normal((130,)).astype(np.float32))
+    compact = compress.compress(spec, leaf)
+    back = compress.decompress(spec, compact, leaf.shape, leaf.dtype)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(leaf), atol=1e-5)
+
+
+def test_error_feedback_identity_decomposition():
+    """decompress(compress(g)) + residual(g) == g (orthonormal split)."""
+    spec = compress.make_spec(width=64, ratio=0.25)
+    leaf = jnp.asarray(np.random.default_rng(3)
+                       .standard_normal((200,)).astype(np.float32))
+    low = compress.decompress(spec, compress.compress(spec, leaf),
+                              leaf.shape, jnp.float32)
+    res = compress.residual(spec, leaf)
+    np.testing.assert_allclose(np.asarray(low + res), np.asarray(leaf),
+                               atol=1e-5)
+
+
+def test_ef_sgd_converges_despite_compression():
+    """EF-compressed gradient descent still reaches the optimum (requires
+    the round-robin kept window — a fixed window provably cannot)."""
+    spec = compress.make_spec(width=32, ratio=0.25)
+    rng = np.random.default_rng(4)
+    target = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    w = jnp.zeros(64)
+    err = jnp.zeros(64)
+    for t in range(300):
+        g = 2 * (w - target)
+        g_c, err = compress.ef_roundtrip(spec, g, err, step=t)
+        w = w - 0.05 * g_c
+    np.testing.assert_allclose(np.asarray(w), np.asarray(target), atol=0.05)
+
+
+def test_fixed_window_does_not_converge():
+    """Negative control for the round-robin design decision."""
+    spec = compress.make_spec(width=32, ratio=0.25)
+    rng = np.random.default_rng(5)
+    target = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    w = jnp.zeros(64)
+    err = jnp.zeros(64)
+    for _ in range(300):
+        g = 2 * (w - target)
+        g_c, err = compress.ef_roundtrip(spec, g, err, step=0)  # frozen
+        w = w - 0.05 * g_c
+    assert float(jnp.abs(w - target).max()) > 0.1
+
+
+def test_compression_ratio_bytes():
+    spec = compress.make_spec(width=128, ratio=0.125)
+    leaf = jnp.zeros((1024,))
+    compact = compress.compress(spec, leaf)
+    assert compact.shape == (8, 16)  # 1024/128 chunks x 128*0.125 kept
+    assert compact.size * 8 == leaf.size  # 8x fewer cross-pod bytes
+
+
+def test_tree_ef_small_leaves_passthrough():
+    spec = compress.make_spec(width=64, ratio=0.25)
+    grads = {"big": jnp.ones((1 << 15,)), "small": jnp.ones((8,))}
+    errs = {"big": jnp.zeros((1 << 15,)), "small": jnp.zeros((8,))}
+    new_g, new_e = compress.tree_ef_compress(spec, grads, errs)
+    np.testing.assert_allclose(np.asarray(new_g["small"]), 1.0)  # untouched
+    np.testing.assert_allclose(np.asarray(new_e["small"]), 0.0)

@@ -1,0 +1,153 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (approximate_symmetric, g_to_dense, gapply,
+                        pack_g, pack_t, t_to_dense, tapply)
+from repro.core.polyutil import minimize_quartic, real_cubic_roots
+from repro.core.types import SCALE, SHEAR, TFactors, GFactors
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def sym_matrix(draw):
+    n = draw(st.integers(4, 16))
+    seed = draw(st.integers(0, 2 ** 16))
+    x = np.random.default_rng(seed).standard_normal((n, n))
+    return jnp.asarray((x + x.T).astype(np.float32))
+
+
+@st.composite
+def g_factors(draw):
+    n = draw(st.integers(4, 12))
+    g = draw(st.integers(1, 24))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    i = rng.integers(0, n - 1, g)
+    j = rng.integers(1, n, g)
+    j = np.where(j <= i, i + 1, j)
+    theta = rng.uniform(-np.pi, np.pi, g)
+    sigma = rng.choice([1.0, -1.0], g)
+    return n, GFactors(jnp.asarray(i.astype(np.int32)),
+                       jnp.asarray(j.astype(np.int32)),
+                       jnp.asarray(np.cos(theta).astype(np.float32)),
+                       jnp.asarray(np.sin(theta).astype(np.float32)),
+                       jnp.asarray(sigma.astype(np.float32)))
+
+
+@st.composite
+def t_factors(draw):
+    n = draw(st.integers(4, 12))
+    m = draw(st.integers(1, 20))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    kind = rng.integers(0, 2, m).astype(np.int32)
+    i = rng.integers(0, n, m)
+    j = rng.integers(0, n, m)
+    j = np.where((kind == SHEAR) & (j == i), (i + 1) % n, j)
+    j = np.where(kind == SCALE, i, j)
+    a = rng.uniform(0.3, 3.0, m) * rng.choice([-1.0, 1.0], m)
+    return n, TFactors(jnp.asarray(kind), jnp.asarray(i.astype(np.int32)),
+                       jnp.asarray(j.astype(np.int32)),
+                       jnp.asarray(a.astype(np.float32)))
+
+
+@given(g_factors())
+def test_g_product_always_orthonormal(nf):
+    n, f = nf
+    u = np.asarray(g_to_dense(f, n))
+    np.testing.assert_allclose(u @ u.T, np.eye(n), atol=1e-4)
+
+
+@given(g_factors())
+def test_gapply_preserves_norm(nf):
+    n, f = nf
+    x = np.random.default_rng(0).standard_normal((n, 3)).astype(np.float32)
+    y = np.asarray(gapply(f, jnp.asarray(x), axis=0))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=0),
+                               np.linalg.norm(x, axis=0), rtol=1e-4)
+
+
+@given(g_factors())
+def test_g_adjoint_is_inverse(nf):
+    n, f = nf
+    x = np.random.default_rng(1).standard_normal((n, 2)).astype(np.float32)
+    y = gapply(f, jnp.asarray(x), axis=0)
+    back = np.asarray(gapply(f, y, adjoint=True, axis=0))
+    np.testing.assert_allclose(back, x, atol=1e-4)
+
+
+@given(g_factors())
+def test_staged_packing_is_exact(nf):
+    n, f = nf
+    st_ = pack_g(f)
+    x = np.random.default_rng(2).standard_normal((4, n)).astype(np.float32)
+    seq = np.asarray(gapply(f, jnp.asarray(x), axis=-1))
+    stg = np.asarray(ref.staged_g_apply(st_, jnp.asarray(x)))
+    np.testing.assert_allclose(stg, seq, atol=1e-4)
+
+
+@given(t_factors())
+def test_t_inverse_roundtrip(nf):
+    n, f = nf
+    x = np.random.default_rng(3).standard_normal((n, 2)).astype(np.float32)
+    y = tapply(f, jnp.asarray(x), axis=0)
+    back = np.asarray(tapply(f, y, inverse=True, axis=0))
+    np.testing.assert_allclose(back, x, rtol=2e-2, atol=2e-2)
+
+
+@given(t_factors())
+def test_staged_t_is_exact(nf):
+    n, f = nf
+    st_ = pack_t(f, n)
+    x = np.random.default_rng(4).standard_normal((4, n)).astype(np.float32)
+    seq = np.asarray(tapply(f, jnp.asarray(x), axis=-1))
+    stg = np.asarray(ref.staged_t_apply(st_, jnp.asarray(x)))
+    np.testing.assert_allclose(stg, seq, rtol=1e-3, atol=1e-3)
+
+
+@given(sym_matrix(), st.integers(1, 4))
+def test_factorization_objective_bounded(s, alpha):
+    n = s.shape[0]
+    g = alpha * n
+    _, _, info = approximate_symmetric(s, g=g, n_iter=2)
+    obj = float(info["objective"])
+    base = float(jnp.sum((s - jnp.diag(jnp.diagonal(s))) ** 2)
+                 + 0 * jnp.sum(s))
+    total = float(jnp.sum(s * s))
+    assert 0.0 <= obj <= total + 1e-3  # never worse than zero-approx
+
+
+@given(st.floats(0.5, 4), st.booleans(), st.lists(st.floats(-4, 4),
+                                                  min_size=3, max_size=3))
+def test_cubic_root_candidates_cover_true_roots(lead, neg, rest):
+    """What minimize_quartic needs: every TRUE real root is close to some
+    returned candidate (candidate list may contain non-roots — they are
+    filtered downstream by objective evaluation)."""
+    a3 = -lead if neg else lead
+    a2, a1, a0 = rest
+    roots = np.asarray(real_cubic_roots(
+        jnp.asarray(a3, jnp.float32), jnp.asarray(a2, jnp.float32),
+        jnp.asarray(a1, jnp.float32), jnp.asarray(a0, jnp.float32)))
+    true = np.roots([a3, a2, a1, a0])
+    true_real = true[np.abs(true.imag) < 1e-8].real
+    for r in true_real:
+        dist = np.min(np.abs(roots - r))
+        assert dist <= 1e-2 * (1.0 + abs(r)) ** 2, (roots, true_real)
+
+
+@given(st.lists(st.floats(-3, 3), min_size=4, max_size=4))
+def test_quartic_minimizer_never_positive(coeffs):
+    c1, c2, c3, c4 = [jnp.asarray(c, jnp.float32) for c in coeffs]
+    a, v = minimize_quartic(c1, c2, c3, c4)
+    # q(0) = 0 is always a candidate so the min is <= 0
+    assert float(v) <= 1e-6
+    # reported value matches the polynomial at the reported argmin
+    av = float(a)
+    q = av * (coeffs[0] + av * (coeffs[1] + av * (coeffs[2] + av * coeffs[3])))
+    np.testing.assert_allclose(float(v), q, rtol=1e-3, atol=1e-4)

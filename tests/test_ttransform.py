@@ -1,0 +1,117 @@
+"""Unit tests for the general-case T-transform factorization (Thm 3/4,
+Lemma 2, Algorithm 1)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (approximate_general, t_init, t_polish, t_objective,
+                        t_to_dense, tapply, t_reconstruct, lemma2_spectrum)
+from repro.core.types import SCALE, SHEAR, TFactors
+
+
+def random_gen(n, seed=0):
+    return np.random.default_rng(seed).standard_normal(
+        (n, n)).astype(np.float32)
+
+
+def random_tfactors(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    kind = rng.integers(0, 2, m).astype(np.int32)
+    i = rng.integers(0, n, m).astype(np.int32)
+    j = rng.integers(0, n, m).astype(np.int32)
+    j = np.where((kind == SHEAR) & (j == i), (i + 1) % n, j)
+    j = np.where(kind == SCALE, i, j)
+    a = rng.uniform(0.5, 2.0, m).astype(np.float32) * rng.choice([-1, 1], m)
+    return TFactors(jnp.asarray(kind), jnp.asarray(i), jnp.asarray(j),
+                    jnp.asarray(a))
+
+
+def test_inverse_roundtrip():
+    n, m = 12, 30
+    f = random_tfactors(n, m, 1)
+    t = np.asarray(t_to_dense(f, n))
+    tinv = np.asarray(t_to_dense(f, n, inverse=True))
+    np.testing.assert_allclose(t @ tinv, np.eye(n), atol=1e-4)
+
+
+def test_tapply_matches_dense():
+    n, m = 10, 20
+    f = random_tfactors(n, m, 2)
+    t = np.asarray(t_to_dense(f, n))
+    x = np.random.default_rng(0).standard_normal((n, 3)).astype(np.float32)
+    y = tapply(f, jnp.asarray(x), axis=0)
+    np.testing.assert_allclose(np.asarray(y), t @ x, rtol=1e-4, atol=1e-4)
+    yi = tapply(f, jnp.asarray(x), inverse=True, axis=0)
+    np.testing.assert_allclose(np.asarray(yi), np.linalg.solve(t, x),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_t_reconstruct_matches_dense():
+    n, m = 9, 15
+    f = random_tfactors(n, m, 3)
+    cbar = jnp.asarray(np.arange(1, n + 1, dtype=np.float32))
+    dense = np.asarray(t_to_dense(f, n))
+    want = dense @ np.diag(np.arange(1, n + 1)) @ np.linalg.inv(dense)
+    got = np.asarray(t_reconstruct(f, cbar))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_objective_decreases_over_iterations():
+    c = jnp.asarray(random_gen(24, 4))
+    _, _, info = approximate_general(c, m=48, n_iter=5, eps=0.0)
+    hist = np.asarray(info["history"])
+    hist = hist[~np.isnan(hist)]
+    assert len(hist) >= 2
+    assert np.all(np.diff(hist) <= 1e-3 * hist[0] + 1e-3)
+
+
+def test_greedy_init_beats_diagonal_only():
+    c = jnp.asarray(random_gen(16, 5))
+    cbar = jnp.diagonal(c)
+    base = float(jnp.sum((c - jnp.diag(cbar)) ** 2))
+    factors, _ = t_init(c, cbar, 24)
+    after = float(t_objective(c, factors, cbar))
+    assert after < base
+
+
+def test_polish_never_regresses():
+    c = jnp.asarray(random_gen(16, 6))
+    cbar = jnp.diagonal(c)
+    factors, _ = t_init(c, cbar, 20)
+    before = float(t_objective(c, factors, cbar))
+    f2 = t_polish(c, factors, cbar)
+    after = float(t_objective(c, f2, cbar))
+    assert after <= before + 1e-3 * abs(before) + 1e-3
+
+
+def test_lemma2_spectrum_improves_or_matches():
+    c = jnp.asarray(random_gen(12, 7))
+    cbar0 = jnp.diagonal(c)
+    factors, _ = t_init(c, cbar0, 16)
+    before = float(t_objective(c, factors, cbar0))
+    cb = lemma2_spectrum(c, factors)
+    after = float(t_objective(c, factors, cb))
+    assert after <= before + 1e-3
+
+
+def test_diagonalizable_exact_small():
+    """A matrix that IS a short T-product times a diagonal reconstructs
+    (near-)exactly once m is large enough."""
+    n = 6
+    f = random_tfactors(n, 4, seed=8)
+    cbar = jnp.asarray(np.linspace(1.0, 2.0, n).astype(np.float32))
+    c = t_reconstruct(f, cbar)
+    _, _, info = approximate_general(c, m=24, n_iter=8)
+    rel = float(info["objective"]) / float(jnp.sum(c * c))
+    assert rel < 0.05
+
+
+def test_accuracy_improves_with_m():
+    c = jnp.asarray(random_gen(24, 9))
+    den = float(jnp.sum(c * c))
+    errs = []
+    for m in (12, 48, 120):
+        _, _, info = approximate_general(c, m=m, n_iter=3)
+        errs.append(float(info["objective"]) / den)
+    assert errs[0] >= errs[1] >= errs[2]
+    assert errs[2] < errs[0]
