@@ -8,7 +8,8 @@ import time
 import traceback
 
 from . import (fig1_graph_accuracy, fig2_fgft_comparison, fig4_vs_directU,
-               fig5_random_matrices, fig6_speedup, kernels_micro, roofline)
+               fig5_random_matrices, fig6_speedup, fig7_batched,
+               kernels_micro, roofline)
 
 BENCHES = {
     "fig1": fig1_graph_accuracy.run,
@@ -16,6 +17,7 @@ BENCHES = {
     "fig4": fig4_vs_directU.run,
     "fig5": fig5_random_matrices.run,
     "fig6": fig6_speedup.run,
+    "fig7": fig7_batched.run,
     "kernels": kernels_micro.run,
     "roofline": roofline.run,
 }

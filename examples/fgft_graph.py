@@ -7,10 +7,29 @@ truncated Jacobi, and run spectral filtering through the staged kernels.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (build_fgft, laplacian, relative_error,
-                        truncated_jacobi, g_objective)
+from repro.core import (ApproxEigenbasis, build_fgft, laplacian,
+                        relative_error, truncated_jacobi, g_objective)
 from repro.graphs import (community_graph, erdos_renyi, sensor_graph,
                           real_graph_standin)
+
+
+def batched_demo(n: int, g: int):
+    """All three graph families factored in ONE jit (the batched engine),
+    then filtered together through one batched fused-kernel dispatch."""
+    gens = (("community", community_graph),
+            ("erdos", lambda n, seed: erdos_renyi(n, 0.3, seed)),
+            ("sensor", sensor_graph))
+    laps = np.stack([laplacian(gen(n, seed=0)) for _, gen in gens])
+    basis = ApproxEigenbasis.fit(jnp.asarray(laps), g, n_iter=3)
+    rel = np.asarray(basis.objective) / (laps * laps).sum(axis=(1, 2))
+    print("\nbatched engine (one jit for all graphs):")
+    for (name, _), r in zip(gens, rel):
+        print(f"  {name:12s} rel error {r:.5f}")
+    signals = jnp.asarray(np.random.default_rng(7).standard_normal(
+        (len(gens), 4, n)).astype(np.float32))
+    smooth = basis.project(signals, h=lambda lam: 1.0 / (1.0 + lam))
+    print(f"  one dispatch low-pass filtered {smooth.shape[0]} graphs x "
+          f"{smooth.shape[1]} signals")
 
 
 def main():
@@ -51,6 +70,8 @@ def main():
     err_after = float(((np.asarray(denoised) - base) ** 2).mean())
     print(f"\nlow-pass denoising MSE: {err_before:.3f} -> {err_after:.3f} "
           f"(O(n log n) filter via staged kernels)")
+
+    batched_demo(n, g)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ from .ttransform import (approximate_general, t_init, t_polish, t_objective,
                          t_to_dense, tapply, t_reconstruct, lemma2_spectrum)
 from .staging import (StagedG, StagedT, pack_g, pack_g_adjoint, pack_t,
                       pack_t_inverse)
+from .eigenbasis import ApproxEigenbasis
 from .fgft import FGFT, build_fgft, laplacian, relative_error
 from .baselines import (truncated_jacobi, factorize_orthonormal,
                         rank_r_symmetric, rank_r_general)

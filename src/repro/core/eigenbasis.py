@@ -1,0 +1,326 @@
+"""ApproxEigenbasis: one facade over both factorization families, batched.
+
+The paper factors an eigenspace into g fundamental components — extended
+orthogonal Givens transforms for symmetric matrices (Algorithm 1 with
+Theorems 1-2 + Lemma 1) or scaling/shear transforms for general matrices
+(Theorems 3-4 + Lemma 2).  The seed exposed those as two parallel APIs
+(core/gtransform.py, core/ttransform.py) that factor ONE matrix at a time.
+This module is the single entry point and the batched engine (DESIGN.md §7):
+
+  * ``fit`` runs Algorithm 1 for a whole stack of B matrices inside one
+    jitted program — the solver cores are pure ``lax`` control flow, so
+    ``jit(vmap(core))`` runs B greedy factorizations in lockstep, and a
+    device mesh shards the matrix batch across the data axes
+    (runtime/sharding.py + launch/mesh.py).
+  * ``apply`` / ``project`` route through the batched staged tables
+    ((B, S, P); core/staging.py) into the fused Pallas kernels
+    (kernels/butterfly.py, kernels/shear.py) with the vmapped ref.py
+    oracle as the ``backend="xla"`` fallback.
+  * ``save`` / ``load`` persist factors + spectrum through the
+    fault-tolerant checkpoint store (checkpoint/store.py; DESIGN.md §6).
+
+Everything also works unbatched ((n, n) input) so single-matrix callers can
+migrate from the two legacy APIs without behavior change.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gtransform as gt
+from . import ttransform as tt
+from .staging import (StagedG, StagedT, pack_g, pack_g_adjoint, pack_g_batch,
+                      pack_t, pack_t_batch, pack_t_inverse)
+from .types import GFactors, TFactors
+
+SYMMETRIC = "sym"
+GENERAL = "general"
+
+
+# ---------------------------------------------------------------------------
+# Cached jitted fit programs (one compile per (kind, g, hyperparam) combo)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sym_fit_program(g: int, n_iter: int, update_spectrum: bool,
+                     eps: float, score: str, batched: bool):
+    def one(s_mat, sbar0):
+        return gt._approx_sym_core(
+            s_mat, sbar0, g, n_iter, update_spectrum,
+            jnp.asarray(eps, s_mat.dtype), score)
+
+    return jax.jit(jax.vmap(one) if batched else one)
+
+
+@functools.lru_cache(maxsize=None)
+def _gen_fit_program(m: int, n_iter: int, update_spectrum: bool,
+                     eps: float, batched: bool):
+    def one(c_mat, cbar0):
+        return tt._approx_gen_core(
+            c_mat, cbar0, m, n_iter, update_spectrum,
+            jnp.asarray(eps, c_mat.dtype))
+
+    return jax.jit(jax.vmap(one) if batched else one)
+
+
+def _is_symmetric(mats: jnp.ndarray) -> bool:
+    # on-device reduction: only one scalar crosses to the host (the batch
+    # may be large and already device-resident)
+    return bool(jnp.allclose(mats, jnp.swapaxes(mats, -1, -2), atol=1e-6))
+
+
+@dataclass
+class ApproxEigenbasis:
+    """A fitted fast approximate eigenbasis (single matrix or a batch).
+
+    Attributes:
+      kind: "sym" (G-transforms) or "general" (T-transforms).
+      n: matrix side.
+      batched: True when ``factors``/``spectrum`` carry a leading batch dim.
+      factors: GFactors (g,)-arrays or TFactors (m,)-arrays; (B, g)/(B, m)
+        when batched.
+      spectrum: estimated eigenvalues, (n,) or (B, n) f32.
+      fwd: staged Ubar / Tbar tables, (S, P) or (B, S, P).
+      bwd: staged Ubar^T / Tbar^{-1} tables, same layout.
+      objective: final ||M - reconstruction||_F^2, scalar or (B,).
+      info: fit diagnostics (objective history, iteration counts).
+    """
+
+    kind: str
+    n: int
+    batched: bool
+    factors: Union[GFactors, TFactors]
+    spectrum: jnp.ndarray
+    fwd: Union[StagedG, StagedT]
+    bwd: Union[StagedG, StagedT]
+    objective: Optional[jnp.ndarray] = None
+    info: Dict[str, Any] = field(default_factory=dict)
+
+    # -- fitting -----------------------------------------------------------
+
+    @classmethod
+    def fit(cls, mats: jnp.ndarray, num_transforms: int, *,
+            kind: str = "auto", n_iter: int = 8, eps: float = 1e-3,
+            update_spectrum: bool = True,
+            spectrum: Optional[jnp.ndarray] = None,
+            score: Optional[str] = None,
+            mesh: Optional[Any] = None) -> "ApproxEigenbasis":
+        """Factor one matrix (n, n) or a batch (B, n, n) — Algorithm 1.
+
+        A batch runs inside ONE jit: the B greedy factorizations advance in
+        lockstep (vmapped Theorem-1/3 init + Theorem-2/4 polish sweeps +
+        Lemma-1/2 spectrum refits), which is the embarrassing per-matrix
+        parallelism of the problem.  With ``mesh`` the batch is device_put
+        against the mesh's data axes first, so the same program runs SPMD
+        across devices (DESIGN.md §7).
+
+        ``kind="auto"`` picks "sym" when the input is (numerically)
+        symmetric.  ``score``/``spectrum`` have the same meaning as in
+        ``approximate_symmetric`` (ignored score for the general case).
+        """
+        mats = jnp.asarray(mats, jnp.float32)
+        if mats.ndim not in (2, 3):
+            raise ValueError(f"expected (n, n) or (B, n, n), got {mats.shape}")
+        batched = mats.ndim == 3
+        n = mats.shape[-1]
+        if mats.shape[-2] != n:
+            raise ValueError(f"matrices must be square, got {mats.shape}")
+        if kind == "auto":
+            kind = SYMMETRIC if _is_symmetric(mats) else GENERAL
+        if mesh is not None and batched:
+            # unbatched (n, n) input has no batch axis to spread — only a
+            # (B, n, n) stack shards; awkward B falls back to replication
+            from repro.runtime.sharding import matrix_batch_sharding
+            mats = jax.device_put(
+                mats, matrix_batch_sharding(mesh, mats.ndim,
+                                            batch=mats.shape[0]))
+
+        if kind == SYMMETRIC:
+            if score is None:
+                score = "paper" if spectrum is not None else "gamma"
+            sbar0 = (jnp.asarray(spectrum, jnp.float32)
+                     if spectrum is not None else gt.default_sbar(mats))
+            fit_fn = _sym_fit_program(num_transforms, n_iter,
+                                      update_spectrum, float(eps), score,
+                                      batched)
+            factors, sbar, obj, hist, iters = fit_fn(mats, sbar0)
+            fwd = (pack_g_batch(factors, n) if batched else pack_g(factors))
+            bwd = (pack_g_batch(factors, n, adjoint=True) if batched
+                   else pack_g_adjoint(factors))
+            return cls(kind=SYMMETRIC, n=n, batched=batched,
+                       factors=factors, spectrum=sbar, fwd=fwd, bwd=bwd,
+                       objective=obj,
+                       info={"history": hist, "iterations": iters})
+
+        if kind == GENERAL:
+            cbar0 = (jnp.asarray(spectrum, jnp.float32)
+                     if spectrum is not None else tt.default_cbar(mats))
+            fit_fn = _gen_fit_program(num_transforms, n_iter,
+                                      update_spectrum, float(eps), batched)
+            factors, cbar, obj, hist, iters = fit_fn(mats, cbar0)
+            fwd = (pack_t_batch(factors, n) if batched
+                   else pack_t(factors, n))
+            bwd = (pack_t_batch(factors, n, inverse=True) if batched
+                   else pack_t_inverse(factors, n))
+            return cls(kind=GENERAL, n=n, batched=batched,
+                       factors=factors, spectrum=cbar, fwd=fwd, bwd=bwd,
+                       objective=obj,
+                       info={"history": hist, "iterations": iters})
+
+        raise ValueError(f"unknown kind {kind!r}")
+
+    # -- application -------------------------------------------------------
+
+    def _ops(self):
+        from repro.kernels import ops as kops
+        return kops
+
+    def apply(self, x: jnp.ndarray, inverse: bool = False,
+              backend: str = "xla") -> jnp.ndarray:
+        """y = Ubar x (or Tbar x); ``inverse=True`` applies Ubar^T /
+        Tbar^{-1} (graph Fourier ANALYSIS; forward is SYNTHESIS).
+
+        ``x``: (..., n), with a leading (B, ...) batch when ``batched``.
+        """
+        kops = self._ops()
+        staged = self.bwd if inverse else self.fwd
+        if self.kind == SYMMETRIC:
+            fn = kops.batched_g_apply if self.batched else kops.g_apply
+        else:
+            fn = kops.batched_t_apply if self.batched else kops.t_apply
+        return fn(staged, x, backend=backend)
+
+    def project(self, x: jnp.ndarray,
+                h: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+                backend: str = "xla") -> jnp.ndarray:
+        """Apply the reconstructed operator (a spectral projection/filter):
+
+            y = Ubar diag(h(spectrum)) Ubar^T x      (symmetric)
+            y = Tbar diag(h(spectrum)) Tbar^{-1} x   (general)
+
+        ``h`` defaults to the identity (the approximated matrix itself).
+        ``backend="pallas"`` runs the fused one-round-trip kernel; batched
+        instances use the (B, S, P)-table batched kernels (DESIGN.md §4,
+        §7)."""
+        kops = self._ops()
+        d = self.spectrum if h is None else h(self.spectrum)
+        if self.kind == SYMMETRIC:
+            fn = (kops.batched_sym_operator if self.batched
+                  else kops.sym_operator)
+        else:
+            fn = (kops.batched_gen_operator if self.batched
+                  else kops.gen_operator)
+        return fn(self.fwd, self.bwd, d, x, backend=backend)
+
+    def to_dense(self) -> jnp.ndarray:
+        """Materialize the basis: Ubar / Tbar as (n, n) or (B, n, n)."""
+        eye = jnp.eye(self.n, dtype=jnp.float32)
+        if self.batched:
+            b = self.spectrum.shape[0]
+            eye = jnp.broadcast_to(eye, (b, self.n, self.n))
+        # staged apply acts on row vectors: row r of the result is
+        # (basis e_r), i.e. the transpose of the basis matrix
+        return jnp.swapaxes(self.apply(eye), -1, -2)
+
+    def reconstruct(self) -> jnp.ndarray:
+        """Dense approximation  Ubar diag(s) Ubar^T  /  Tbar diag(c)
+        Tbar^{-1}  as (n, n) or (B, n, n) (small-n evaluation only)."""
+        eye = jnp.eye(self.n, dtype=jnp.float32)
+        if self.batched:
+            b = self.spectrum.shape[0]
+            eye = jnp.broadcast_to(eye, (b, self.n, self.n))
+        return jnp.swapaxes(self.project(eye), -1, -2)
+
+    def frobenius_error(self, mats: jnp.ndarray) -> jnp.ndarray:
+        """||M - reconstruction||_F^2 per matrix (scalar or (B,))."""
+        diff = jnp.asarray(mats, jnp.float32) - self.reconstruct()
+        return jnp.sum(diff * diff, axis=(-2, -1))
+
+    def shard(self, mesh) -> "ApproxEigenbasis":
+        """Device_put the staged tables + spectrum against ``mesh``: the
+        leading matrix-batch axis maps to the mesh's data axes, so
+        ``apply``/``project`` on (B, ..., n) signals run SPMD without any
+        code change (runtime/sharding.py)."""
+        if not self.batched:
+            return self
+        from repro.runtime.sharding import matrix_batch_sharding
+        batch = int(self.spectrum.shape[0])
+
+        def put(leaf):
+            if isinstance(leaf, (int, np.integer)):
+                return leaf
+            return jax.device_put(
+                leaf, matrix_batch_sharding(mesh, jnp.ndim(leaf),
+                                            batch=batch))
+
+        fwd = type(self.fwd)(*(put(l) for l in self.fwd))
+        bwd = type(self.bwd)(*(put(l) for l in self.bwd))
+        return replace(self, fwd=fwd, bwd=bwd, spectrum=put(self.spectrum))
+
+    # -- persistence (checkpoint/store.py; DESIGN.md §6) --------------------
+
+    def save(self, directory, step: int = 0):
+        """Persist factors + spectrum via the atomic checkpoint store."""
+        from repro.checkpoint import save_checkpoint
+        state = {"factors": self.factors, "spectrum": self.spectrum}
+        meta = {
+            "eigenbasis": {
+                "kind": self.kind, "n": self.n, "batched": self.batched,
+                "num_transforms": int(
+                    np.asarray(self.factors[0]).shape[-1]),
+                "batch": (int(self.spectrum.shape[0]) if self.batched
+                          else 0),
+            }
+        }
+        return save_checkpoint(directory, step, state, metadata=meta)
+
+    @classmethod
+    def load(cls, directory, step: Optional[int] = None
+             ) -> "ApproxEigenbasis":
+        """Restore a fitted basis and rebuild its staged tables."""
+        from repro.checkpoint import restore_checkpoint, latest_step
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint in {directory}")
+        import json
+        import pathlib
+        manifest = json.loads(
+            (pathlib.Path(directory) / f"step_{step:09d}" /
+             "manifest.json").read_text())
+        meta = manifest.get("metadata", {}).get("eigenbasis")
+        if meta is None:
+            raise ValueError(f"checkpoint at {directory} does not hold an "
+                             "ApproxEigenbasis state")
+        kind, n = meta["kind"], int(meta["n"])
+        batched = bool(meta["batched"])
+        g = int(meta["num_transforms"])
+        shape = (int(meta["batch"]), g) if batched else (g,)
+        nsh = (int(meta["batch"]), n) if batched else (n,)
+        zi = jnp.zeros(shape, jnp.int32)
+        zf = jnp.zeros(shape, jnp.float32)
+        if kind == SYMMETRIC:
+            factors_like = GFactors(i=zi, j=zi, c=zf, s=zf, sigma=zf)
+        else:
+            factors_like = TFactors(kind=zi, i=zi, j=zi, a=zf)
+        like = {"factors": factors_like,
+                "spectrum": jnp.zeros(nsh, jnp.float32)}
+        state, _, _ = restore_checkpoint(directory, like, step=step)
+        factors, spectrum = state["factors"], state["spectrum"]
+        if kind == SYMMETRIC:
+            fwd = pack_g_batch(factors, n) if batched else pack_g(factors)
+            bwd = (pack_g_batch(factors, n, adjoint=True) if batched
+                   else pack_g_adjoint(factors))
+        else:
+            fwd = (pack_t_batch(factors, n) if batched
+                   else pack_t(factors, n))
+            bwd = (pack_t_batch(factors, n, inverse=True) if batched
+                   else pack_t_inverse(factors, n))
+        return cls(kind=kind, n=n, batched=batched, factors=factors,
+                   spectrum=spectrum, fwd=fwd, bwd=bwd)

@@ -42,8 +42,10 @@ class ButterflyPattern(NamedTuple):
 def fft_pattern(n: int, n_stages: int | None = None) -> ButterflyPattern:
     """FFT-butterfly index pattern: stage k pairs (i, i + 2^k mod-block).
 
-    Works for any even n (power-of-two strides wrap within blocks); each
-    stage is a perfect matching so it packs conflict-free by construction.
+    ``n``: even layer width; ``n_stages`` defaults to ceil(log2 n).
+    Returns (S, n//2) int32 index tables.  Each stage is a perfect
+    matching, so it packs conflict-free by construction — no host greedy
+    scheduling needed, unlike fitted chains (DESIGN.md §2-3).
     """
     assert n % 2 == 0, "butterfly mixing needs even width"
     depth = n_stages or max(int(np.ceil(np.log2(n))), 1)
@@ -75,6 +77,9 @@ def fft_pattern(n: int, n_stages: int | None = None) -> ButterflyPattern:
 
 def butterfly_init(key, pattern: ButterflyPattern,
                    dtype=jnp.float32) -> ButterflyParams:
+    """Trainable params for a ButterflyLinear layer: small random angles
+    theta (S, n//2) ~ N(0, 0.1^2) (near-identity init) and a unit diagonal
+    (n,), both ``dtype``."""
     k1, _ = jax.random.split(key)
     theta = jax.random.normal(k1, pattern.idx_i.shape, dtype) * 0.1
     return ButterflyParams(theta=theta,
@@ -102,7 +107,12 @@ def _apply_stages(x, idx_i, idx_j, cos_t, sin_t):
 
 def butterfly_apply(params: ButterflyParams, pattern: ButterflyPattern,
                     x: jnp.ndarray, mix_only: bool = False) -> jnp.ndarray:
-    """y = U(theta) diag(d) U(theta)^T x  (or just U(theta) x)."""
+    """y = U(theta) diag(d) U(theta)^T x  (or just U(theta) x).
+
+    The trainable form of the paper's eq. (2) operator with rotation-only
+    blocks (DESIGN.md §3 mode 1).  ``x``: (..., n), any float dtype
+    (params cast to ``x.dtype``); O(n log n) per vector.  ``mix_only=True``
+    applies the orthonormal mixing U(theta) alone."""
     cos_t = jnp.cos(params.theta)
     sin_t = jnp.sin(params.theta)
     if mix_only:
@@ -125,7 +135,15 @@ class CompressedLinear(NamedTuple):
 
 def compress_linear(w: jnp.ndarray, g_orth: int, g_sym: int,
                     n_iter: int = 6) -> Tuple[CompressedLinear, dict]:
-    """Compress a square W via polar form + the paper's factorizations."""
+    """Compress a trained square projection via the paper's factorizations.
+
+    ``w``: (n, n) float.  Polar-decomposes W = Q H (f64 SVD on host), then
+    factors the orthonormal Q with ``g_orth`` greedy Givens transforms
+    (baselines.factorize_orthonormal) and the symmetric PSD H with
+    Algorithm 1 (``g_sym`` transforms, ``n_iter`` sweeps), giving
+    W ~= Qbar (Ubar diag(s) Ubar^T) at O(g_orth + g_sym) apply cost
+    (DESIGN.md §3 mode 2).  Returns the staged bundle + a report dict
+    {"rel_err", "h_obj"} (f32 reconstruction quality)."""
     n = w.shape[0]
     w64 = np.asarray(w, np.float64)
     u, sv, vt = np.linalg.svd(w64)
@@ -146,6 +164,9 @@ def compress_linear(w: jnp.ndarray, g_orth: int, g_sym: int,
 
 def compressed_linear_apply(comp: CompressedLinear, x: jnp.ndarray,
                             backend: str = "xla") -> jnp.ndarray:
+    """y ~= W x through the compressed factors: the fused symmetric
+    operator (H) followed by the staged Q apply.  ``x``: (..., n);
+    ``backend`` as in kernels/ops.py (DESIGN.md §4)."""
     from repro.kernels import ops as kops
     y = kops.sym_operator(comp.h_fwd, comp.h_adj, comp.diag, x,
                           backend=backend)

@@ -1,10 +1,13 @@
-"""Fast Graph Fourier Transforms — the paper's application (§5).
+"""Fast Graph Fourier Transforms — the paper's application (its §5;
+DESIGN.md §1 "Algorithm 2").
 
 Undirected graph -> symmetric Laplacian -> G-transform factorization
 (orthonormal fast eigenspace).  Directed graph -> general Laplacian ->
 T-transform factorization.  The returned FGFT bundles sequential factors,
-staged (TPU) forms and the estimated spectrum, and exposes analysis /
-synthesis / spectral-filtering operations with O(alpha n log n) cost.
+staged (TPU) forms (DESIGN.md §2) and the estimated spectrum, and exposes
+analysis / synthesis / spectral-filtering operations with O(alpha n log n)
+cost.  For fitting/serving MANY graphs at once use the batched engine,
+core/eigenbasis.py::ApproxEigenbasis (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -23,7 +26,12 @@ from repro.kernels import ops as kops
 
 
 def laplacian(adj: np.ndarray, normalized: bool = False) -> np.ndarray:
-    """L = D - A (out-degree D for directed graphs)."""
+    """Graph Laplacian L = D - A (out-degree D for directed graphs).
+
+    ``adj``: (n, n) adjacency, any real numpy dtype.  Returns (n, n) f32.
+    ``normalized=True`` gives D^{-1/2} L D^{-1/2} (degree-0 rows guarded).
+    Symmetric L feeds Algorithm 1's G-transform path, directed L the
+    T-transform path (paper §5; DESIGN.md §1)."""
     deg = np.asarray(adj).sum(axis=1)
     lap = np.diag(deg) - np.asarray(adj)
     if normalized:
@@ -34,7 +42,12 @@ def laplacian(adj: np.ndarray, normalized: bool = False) -> np.ndarray:
 
 @dataclass
 class FGFT:
-    """A fast approximate graph Fourier transform."""
+    """A fast approximate graph Fourier transform for ONE graph.
+
+    ``spectrum`` is (n,) f32 (estimated graph frequencies, Lemma 1/2);
+    ``fwd``/``bwd`` are the staged (S, P) tables of the synthesis operator
+    and its adjoint/inverse (DESIGN.md §2).  All signal arguments put the
+    graph coordinate on the LAST axis: x is (..., n), f32 or bf16."""
 
     n: int
     directed: bool
@@ -47,20 +60,28 @@ class FGFT:
 
     # -- ops ---------------------------------------------------------------
     def analysis(self, x: jnp.ndarray, backend: str = "xla") -> jnp.ndarray:
-        """Graph Fourier coefficients  x_hat = Ubar^T x  (or Tbar^{-1} x)."""
+        """Graph Fourier coefficients  x_hat = Ubar^T x  (or Tbar^{-1} x).
+
+        x: (..., n) -> (..., n), same dtype.  Cost 6g (G) or m1+2m2 (T)
+        flops per vector — paper Table 1 (vs 2n^2 dense)."""
         if self.directed:
             return kops.t_apply(self.bwd, x, backend=backend)
         return kops.g_apply(self.bwd, x, backend=backend)
 
     def synthesis(self, xh: jnp.ndarray, backend: str = "xla") -> jnp.ndarray:
-        """x = Ubar x_hat (or Tbar x_hat)."""
+        """Inverse transform  x = Ubar x_hat  (or Tbar x_hat): (..., n) ->
+        (..., n).  Exact inverse of ``analysis`` for the G case
+        (orthonormal); for T it inverts up to f32 conditioning of Tbar."""
         if self.directed:
             return kops.t_apply(self.fwd, xh, backend=backend)
         return kops.g_apply(self.fwd, xh, backend=backend)
 
     def filter(self, x: jnp.ndarray, h: Callable[[jnp.ndarray], jnp.ndarray],
                backend: str = "xla") -> jnp.ndarray:
-        """Spectral filter:  Ubar diag(h(spectrum)) Ubar^T x (fused kernel)."""
+        """Spectral filter  y = Ubar diag(h(spectrum)) Ubar^T x  (or the
+        Tbar form) — eq. (2)/(7) as an operator.  ``h`` maps (n,) graph
+        frequencies to (n,) gains; x: (..., n).  ``backend="pallas"`` runs
+        the fused one-round-trip kernel (DESIGN.md §4)."""
         d = h(self.spectrum)
         if self.directed:
             return kops.gen_operator(self.fwd, self.bwd, d, x,
@@ -79,7 +100,13 @@ class FGFT:
 def build_fgft(lap: jnp.ndarray, num_transforms: int, directed: bool,
                n_iter: int = 8, eps: float = 1e-3,
                update_spectrum: bool = True) -> FGFT:
-    """Factorize a graph Laplacian into a fast approximate GFT."""
+    """Factorize one (n, n) graph Laplacian into a fast approximate GFT.
+
+    Runs Algorithm 1 (DESIGN.md §1) with ``num_transforms`` components and
+    at most ``n_iter`` refinement sweeps (early stop when the objective
+    change drops below ``eps``), then host-packs the staged forms
+    (DESIGN.md §2).  Input is cast to f32.  For a batch of graphs use
+    ``ApproxEigenbasis.fit`` (one jit for all; DESIGN.md §7)."""
     lap = jnp.asarray(lap, jnp.float32)
     n = lap.shape[0]
     if directed:
@@ -98,7 +125,8 @@ def build_fgft(lap: jnp.ndarray, num_transforms: int, directed: bool,
 
 
 def relative_error(lap: jnp.ndarray, f: FGFT) -> float:
-    """||L - Lbar||_F^2 / ||L||_F^2 (the paper's accuracy metric)."""
+    """||L - Lbar||_F^2 / ||L||_F^2 — the paper's accuracy metric (its
+    Figs. 1-5).  ``lap``: the (n, n) Laplacian ``f`` was fitted to."""
     lap = jnp.asarray(lap, jnp.float32)
     denom = float(jnp.sum(lap * lap))
     if f.directed:

@@ -403,9 +403,14 @@ def g_objective(s_mat: jnp.ndarray, factors: GFactors, sbar: jnp.ndarray
     return jnp.sum(d * d)
 
 
-@functools.partial(jax.jit, static_argnames=("g", "n_iter",
-                                              "update_spectrum", "score"))
-def _approx_sym_jit(s_mat, sbar0, g, n_iter, update_spectrum, eps, score):
+def _approx_sym_core(s_mat, sbar0, g, n_iter, update_spectrum, eps, score):
+    """Traceable Algorithm-1 body (init + polish/spectrum sweeps).
+
+    Kept jit-free so callers can compose it: ``approximate_symmetric`` jits
+    it directly; the batched engine (core/eigenbasis.py) wraps it in
+    ``jit(vmap(...))`` to run Algorithm 1 for a whole stack of matrices in
+    one program (DESIGN.md §7).
+    """
     factors, w = g_init(s_mat, sbar0, g, score)
     sbar = jnp.where(update_spectrum, jnp.diagonal(w), sbar0)
     obj0 = g_objective(s_mat, factors, sbar)
@@ -429,6 +434,24 @@ def _approx_sym_jit(s_mat, sbar0, g, n_iter, update_spectrum, eps, score):
     return factors, sbar, obj, hist, it
 
 
+_approx_sym_jit = functools.partial(jax.jit, static_argnames=(
+    "g", "n_iter", "update_spectrum", "score"))(_approx_sym_core)
+
+
+def default_sbar(s_mat: jnp.ndarray) -> jnp.ndarray:
+    """Default spectrum estimate: diag(S) with a deterministic tie-break.
+
+    The paper requires distinct estimated eigenvalues; the tiny monotone
+    perturbation keeps pairs with equal diagonal entries selectable.  Works
+    on a single (n, n) matrix or on any leading-batched (..., n, n) stack
+    (used by the batched engine so batched and single fits see bit-identical
+    starting spectra)."""
+    n = s_mat.shape[-1]
+    sbar = jnp.diagonal(s_mat, axis1=-2, axis2=-1)
+    scale = jnp.maximum(jnp.std(sbar, axis=-1, keepdims=True), 1e-6)
+    return sbar + 1e-6 * scale * jnp.arange(n, dtype=s_mat.dtype) / n
+
+
 def approximate_symmetric(
     s_mat: jnp.ndarray,
     g: int,
@@ -446,15 +469,10 @@ def approximate_symmetric(
     on a Laplacian diagonal zero out most pair gains), which is exactly
     the regime Remark 1 addresses.
     """
-    n = s_mat.shape[0]
     if score is None:
         score = "paper" if sbar is not None else "gamma"
     if sbar is None:
-        sbar = jnp.diagonal(s_mat)
-        # the paper requires distinct estimated eigenvalues; deterministic
-        # tie-break keeps pairs with equal sbar selectable
-        scale = jnp.maximum(jnp.std(sbar), 1e-6)
-        sbar = sbar + 1e-6 * scale * jnp.arange(n, dtype=s_mat.dtype) / n
+        sbar = default_sbar(s_mat)
     factors, sbar, obj, hist, iters = _approx_sym_jit(
         s_mat, sbar.astype(s_mat.dtype), g, n_iter, update_spectrum,
         jnp.asarray(eps, s_mat.dtype), score)

@@ -166,6 +166,70 @@ def pack_t_inverse(factors: TFactors, n: int) -> "StagedT":
     return pack_t(rev, n)
 
 
+def _stack_padded(staged_list, fields, pad_values, n):
+    """Stack per-matrix staged tables into (B, S, P) with no-op padding.
+
+    Stage counts and widths differ across a batch (the greedy schedule is
+    data-dependent); every table is padded up to the batch maximum with
+    entries that are structural no-ops (out-of-bounds index ``n`` plus the
+    family's identity values), so one (B, S, P) table set drives a single
+    batched kernel launch for all B factorizations (DESIGN.md §7)."""
+    s_max = max(st.num_stages for st in staged_list)
+    p_max = max(st.idx_i.shape[1] for st in staged_list)
+    stacked = []
+    for field, pad in zip(fields, pad_values):
+        mats = []
+        for st in staged_list:
+            arr = np.asarray(getattr(st, field))
+            full = np.full((s_max, p_max), pad, arr.dtype)
+            full[:arr.shape[0], :arr.shape[1]] = arr
+            mats.append(full)
+        stacked.append(jnp.asarray(np.stack(mats)))
+    return stacked
+
+
+def _gfactors_slice(factors: GFactors, b: int) -> GFactors:
+    return GFactors(*(jnp.asarray(np.asarray(f)[b]) for f in factors))
+
+
+def _tfactors_slice(factors: TFactors, b: int) -> TFactors:
+    return TFactors(*(jnp.asarray(np.asarray(f)[b]) for f in factors))
+
+
+_G_FIELDS = ("idx_i", "idx_j", "c", "s", "sigma")
+_T_FIELDS = ("idx_i", "idx_j", "alpha", "beta")
+
+
+def pack_g_batch(factors: GFactors, n: int, adjoint: bool = False
+                 ) -> "StagedG":
+    """Pack a batch of G-factor chains (leading (B, g) arrays) into one
+    StagedG whose tables carry a leading batch dim: (B, S, P)."""
+    batch = np.asarray(factors.i).shape[0]
+    staged = []
+    for b in range(batch):
+        f = _gfactors_slice(factors, b)
+        staged.append(pack_g_adjoint(f) if adjoint else pack_g(f))
+    pads_n = max(st.n for st in staged)
+    n = max(n, pads_n)
+    ii, jj, cc, ss, sg = _stack_padded(
+        staged, _G_FIELDS, (np.int32(n), np.int32(n), 1.0, 0.0, 1.0), n)
+    return StagedG(ii, jj, cc, ss, sg, n)
+
+
+def pack_t_batch(factors: TFactors, n: int, inverse: bool = False
+                 ) -> "StagedT":
+    """Pack a batch of T-factor chains into one StagedT with (B, S, P)
+    tables (``inverse=True`` stages Tbar^{-1} per matrix)."""
+    batch = np.asarray(factors.kind).shape[0]
+    staged = []
+    for b in range(batch):
+        f = _tfactors_slice(factors, b)
+        staged.append(pack_t_inverse(f, n) if inverse else pack_t(f, n))
+    ii, jj, al, be = _stack_padded(
+        staged, _T_FIELDS, (np.int32(n), np.int32(n), 1.0, 0.0), n)
+    return StagedT(ii, jj, al, be, n)
+
+
 def pack_g_adjoint(factors: GFactors) -> "StagedG":
     """Staged form of Ubar^T (reverse order; rotations flip s)."""
     s = np.asarray(factors.s)

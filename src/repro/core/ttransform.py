@@ -502,8 +502,9 @@ def lemma2_spectrum(c_mat: jnp.ndarray, factors: TFactors) -> jnp.ndarray:
     return jnp.linalg.solve(gram + ridge * jnp.eye(n, dtype=c_mat.dtype), rhs)
 
 
-@functools.partial(jax.jit, static_argnames=("m", "n_iter", "update_spectrum"))
-def _approx_gen_jit(c_mat, cbar0, m, n_iter, update_spectrum, eps):
+def _approx_gen_core(c_mat, cbar0, m, n_iter, update_spectrum, eps):
+    """Traceable Algorithm-1 body for the general case (jit-free so the
+    batched engine can wrap it in ``jit(vmap(...))``; DESIGN.md §7)."""
     factors, _ = t_init(c_mat, cbar0, m)
     cbar_l2 = lemma2_spectrum(c_mat, factors)
     # guard: the f32 refit may be worse than the init spectrum on
@@ -538,6 +539,19 @@ def _approx_gen_jit(c_mat, cbar0, m, n_iter, update_spectrum, eps):
     return factors, cbar, obj, hist, it
 
 
+_approx_gen_jit = functools.partial(jax.jit, static_argnames=(
+    "m", "n_iter", "update_spectrum"))(_approx_gen_core)
+
+
+def default_cbar(c_mat: jnp.ndarray) -> jnp.ndarray:
+    """Default spectrum estimate diag(C) + deterministic tie-break; accepts
+    a single (n, n) matrix or a leading-batched (..., n, n) stack."""
+    n = c_mat.shape[-1]
+    cbar = jnp.diagonal(c_mat, axis1=-2, axis2=-1)
+    scale = jnp.maximum(jnp.std(cbar, axis=-1, keepdims=True), 1e-6)
+    return cbar + 1e-6 * scale * jnp.arange(n, dtype=c_mat.dtype) / n
+
+
 def approximate_general(
     c_mat: jnp.ndarray,
     m: int,
@@ -547,11 +561,8 @@ def approximate_general(
     eps: float = 1e-2,
 ):
     """Algorithm 1, general case. Returns (factors, cbar, info)."""
-    n = c_mat.shape[0]
     if cbar is None:
-        cbar = jnp.diagonal(c_mat)
-        scale = jnp.maximum(jnp.std(cbar), 1e-6)
-        cbar = cbar + 1e-6 * scale * jnp.arange(n, dtype=c_mat.dtype) / n
+        cbar = default_cbar(c_mat)
     factors, cbar, obj, hist, iters = _approx_gen_jit(
         c_mat, cbar.astype(c_mat.dtype), m, n_iter, update_spectrum,
         jnp.asarray(eps, c_mat.dtype))

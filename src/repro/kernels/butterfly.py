@@ -105,6 +105,67 @@ def butterfly_apply(staged: StagedG, x: jnp.ndarray,
     return out[:, :n]
 
 
+def _batched_fused_sym_kernel(aii_ref, ajj_ref, ac_ref, as_ref, asg_ref,
+                              fii_ref, fjj_ref, fc_ref, fs_ref, fsg_ref,
+                              d_ref, x_ref, o_ref):
+    """One grid cell = (matrix b, signal tile i): the (1, S, P) table slice
+    of matrix b is resident in VMEM, the signal tile is (1, bb, n+1)."""
+    x = x_ref[0]
+    dt = x.dtype
+
+    def adj_body(st, xc):
+        return _stage_body(xc, aii_ref[0, st], ajj_ref[0, st],
+                           ac_ref[0, st].astype(dt), as_ref[0, st].astype(dt),
+                           asg_ref[0, st].astype(dt))
+
+    x = lax.fori_loop(0, aii_ref.shape[1], adj_body, x)
+    x = x * d_ref[0].astype(dt)[None, :]
+
+    def fwd_body(st, xc):
+        return _stage_body(xc, fii_ref[0, st], fjj_ref[0, st],
+                           fc_ref[0, st].astype(dt), fs_ref[0, st].astype(dt),
+                           fsg_ref[0, st].astype(dt))
+
+    o_ref[0] = lax.fori_loop(0, fii_ref.shape[1], fwd_body, x)
+
+
+def _batched_table_spec(arr):
+    """One matrix's whole stage table per grid cell: block (1, S, P)."""
+    return pl.BlockSpec((1,) + arr.shape[1:], lambda b, i: (b,) + (0,) *
+                        (arr.ndim - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def batched_sym_operator_apply(fwd: StagedG, adj: StagedG,
+                               diag: jnp.ndarray, x: jnp.ndarray,
+                               block_b: int = DEFAULT_BLOCK_B,
+                               interpret: bool = True) -> jnp.ndarray:
+    """y[b] = Ubar_b diag(d_b) Ubar_b^T x[b] for a batch of factorizations.
+
+    Tables are (B, S, P) (see core/staging.py::pack_g_batch), diag (B, n),
+    x (B, R, n).  Grid is (B, cdiv(R, block_b)): the batch of matrices maps
+    to the first grid axis so each cell stages exactly one matrix's tables
+    into VMEM, and each graph's signal rows tile the second axis exactly as
+    in the single-matrix kernel (DESIGN.md §7)."""
+    b, r, n = x.shape
+    bb = min(block_b, r)
+    grid = (b, pl.cdiv(r, bb))
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 1)))
+    dp = jnp.pad(diag, ((0, 0), (0, 1)), constant_values=1.0)
+    tables = (adj.idx_i, adj.idx_j, adj.c, adj.s, adj.sigma,
+              fwd.idx_i, fwd.idx_j, fwd.c, fwd.s, fwd.sigma, dp)
+    out = pl.pallas_call(
+        _batched_fused_sym_kernel,
+        grid=grid,
+        in_specs=[_batched_table_spec(t) for t in tables]
+        + [pl.BlockSpec((1, bb, n + 1), lambda bm, i: (bm, i, 0))],
+        out_specs=pl.BlockSpec((1, bb, n + 1), lambda bm, i: (bm, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, n + 1), x.dtype),
+        interpret=interpret,
+    )(*tables, xp)
+    return out[..., :n]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_b", "interpret"))
 def sym_operator_apply(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,

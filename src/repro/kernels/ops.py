@@ -1,9 +1,18 @@
-"""Public jit'd wrappers with an xla|pallas backend switch.
+"""Public jit'd kernel wrappers with an ``xla | pallas`` backend switch.
 
 ``backend="xla"`` routes to the pure-jnp oracle (ref.py) — this is the path
 the 512-device dry-run lowers (Pallas TPU kernels cannot lower on the CPU
-backend).  ``backend="pallas"`` routes to the Pallas kernels; in this
-container they execute with interpret=True.
+backend; DESIGN.md §4).  ``backend="pallas"`` routes to the Pallas kernels;
+in this container they execute with ``interpret=True``.
+
+Shape/dtype conventions (DESIGN.md §4):
+  * single-matrix staged tables are (S, P) — S conflict-free stages of
+    width P (core/staging.py); batched tables carry a leading matrix-batch
+    dim: (B, S, P) (DESIGN.md §7).
+  * signals put coordinates on the LAST axis: x is (..., n) for the
+    single-matrix ops and (B, ..., n) for the batched ops.
+  * tables are stored f32; the apply casts them to ``x.dtype`` (bf16
+    signals are supported — see tests/test_kernels.py dtype sweeps).
 """
 from __future__ import annotations
 
@@ -19,7 +28,10 @@ from . import shear as _sh
 
 def g_apply(staged: StagedG, x: jnp.ndarray, backend: str = "xla",
             interpret: bool = True) -> jnp.ndarray:
-    """y[..., :] = Ubar x (staged)."""
+    """y = Ubar x — the product of extended Givens transforms, eq. (5).
+
+    ``staged``: (S, P) tables; ``x``: (..., n), any float dtype.  Returns
+    the same shape/dtype as ``x``.  Cost 6g flops (paper Table 1)."""
     if backend == "xla":
         return _ref.staged_g_apply(staged, x)
     if backend == "pallas":
@@ -31,6 +43,10 @@ def g_apply(staged: StagedG, x: jnp.ndarray, backend: str = "xla",
 
 def t_apply(staged: StagedT, x: jnp.ndarray, backend: str = "xla",
             interpret: bool = True) -> jnp.ndarray:
+    """y = Tbar x — the product of scaling/shear transforms, eq. (10).
+
+    ``staged``: (S, P) tables; ``x``: (..., n).  Cost 1 flop per scaling
+    and 2 per shear (paper Table 1)."""
     if backend == "xla":
         return _ref.staged_t_apply(staged, x)
     if backend == "pallas":
@@ -43,7 +59,11 @@ def t_apply(staged: StagedT, x: jnp.ndarray, backend: str = "xla",
 def sym_operator(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
                  x: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
-    """Sbar x = Ubar diag(d) Ubar^T x."""
+    """Sbar x = Ubar diag(d) Ubar^T x — eq. (2) applied as an operator.
+
+    ``fwd``/``adj`` are the staged Ubar and Ubar^T (ops.stage_g), ``diag``
+    is (n,), ``x`` is (..., n).  The pallas backend fuses all three legs in
+    one VMEM round trip (DESIGN.md §4)."""
     if backend == "xla":
         return _ref.sym_operator_apply(fwd, adj, diag, x)
     if backend == "pallas":
@@ -56,7 +76,10 @@ def sym_operator(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
 def gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
                  x: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
-    """Cbar x = Tbar diag(d) Tbar^{-1} x."""
+    """Cbar x = Tbar diag(d) Tbar^{-1} x — eq. (7) applied as an operator.
+
+    ``fwd``/``inv`` are the staged Tbar and Tbar^{-1} (ops.stage_t),
+    ``diag`` is (n,), ``x`` is (..., n)."""
     if backend == "xla":
         return _ref.gen_operator_apply(fwd, inv, diag, x)
     if backend == "pallas":
@@ -66,11 +89,69 @@ def gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
     raise ValueError(f"unknown backend {backend!r}")
 
 
+# ---------------------------------------------------------------------------
+# Batched operators: one call serves B independent factorizations
+# (DESIGN.md §7; used by core/eigenbasis.py and launch/serve.py --fgft)
+# ---------------------------------------------------------------------------
+
+def batched_sym_operator(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
+                         x: jnp.ndarray, backend: str = "xla",
+                         interpret: bool = True) -> jnp.ndarray:
+    """y[b] = Ubar_b diag(d_b) Ubar_b^T x[b] for every matrix b.
+
+    ``fwd``/``adj``: batched staged tables (B, S, P) from
+    core/staging.py::pack_g_batch; ``diag``: (B, n); ``x``: (B, ..., n).
+    The pallas path maps the matrix batch onto the first kernel grid axis;
+    the xla path is the vmapped oracle (ref.py)."""
+    if backend == "xla":
+        return _ref.batched_sym_operator_apply(fwd, adj, diag, x)
+    if backend == "pallas":
+        b = x.shape[0]
+        flat = x.reshape(b, -1, x.shape[-1])
+        return _bf.batched_sym_operator_apply(
+            fwd, adj, diag, flat, interpret=interpret).reshape(x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def batched_gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
+                         x: jnp.ndarray, backend: str = "xla",
+                         interpret: bool = True) -> jnp.ndarray:
+    """y[b] = Tbar_b diag(d_b) Tbar_b^{-1} x[b] for every matrix b.
+
+    ``fwd``/``inv``: batched staged tables (B, S, P) from
+    core/staging.py::pack_t_batch; ``diag``: (B, n); ``x``: (B, ..., n)."""
+    if backend == "xla":
+        return _ref.batched_gen_operator_apply(fwd, inv, diag, x)
+    if backend == "pallas":
+        b = x.shape[0]
+        flat = x.reshape(b, -1, x.shape[-1])
+        return _sh.batched_gen_operator_apply(
+            fwd, inv, diag, flat, interpret=interpret).reshape(x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def batched_g_apply(staged: StagedG, x: jnp.ndarray,
+                    backend: str = "xla") -> jnp.ndarray:
+    """y[b] = Ubar_b x[b]: tables (B, S, P), x (B, ..., n).  XLA only —
+    the fused operators above are the Pallas-accelerated paths."""
+    if backend != "xla":
+        raise ValueError("batched_g_apply supports backend='xla' only")
+    return _ref.batched_g_apply(staged, x)
+
+
+def batched_t_apply(staged: StagedT, x: jnp.ndarray,
+                    backend: str = "xla") -> jnp.ndarray:
+    """y[b] = Tbar_b x[b]: tables (B, S, P), x (B, ..., n).  XLA only."""
+    if backend != "xla":
+        raise ValueError("batched_t_apply supports backend='xla' only")
+    return _ref.batched_t_apply(staged, x)
+
+
 def stage_g(factors: GFactors):
-    """Convenience: (forward, adjoint) staged forms."""
+    """Convenience: (forward, adjoint) staged forms of one G-chain."""
     return pack_g(factors), pack_g_adjoint(factors)
 
 
 def stage_t(factors: TFactors, n: int):
-    """Convenience: (forward, inverse) staged forms."""
+    """Convenience: (forward, inverse) staged forms of one T-chain."""
     return pack_t(factors, n), pack_t_inverse(factors, n)

@@ -7,6 +7,7 @@ on the CPU backend; DESIGN.md §4).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -60,6 +61,44 @@ def sym_operator_apply(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
     y = staged_g_apply(adj, x)
     y = y * diag.astype(y.dtype)
     return staged_g_apply(fwd, y)
+
+
+# ---------------------------------------------------------------------------
+# Batched oracles: staged tables carry a leading matrix-batch dim (B, S, P)
+# and x is (B, R, n) — one independent factorization per batch row
+# (DESIGN.md §7).  vmap over the single-matrix oracle is the semantics of
+# record for kernels/butterfly.py::batched_sym_operator_apply.
+# ---------------------------------------------------------------------------
+
+_G_AXES = StagedG(0, 0, 0, 0, 0, None)
+_T_AXES = StagedT(0, 0, 0, 0, None)
+
+
+def batched_g_apply(staged: StagedG, x: jnp.ndarray) -> jnp.ndarray:
+    """Per-matrix Ubar_b x_b: tables (B, S, P), x (B, ..., n)."""
+    return jax.vmap(staged_g_apply, in_axes=(_G_AXES, 0))(staged, x)
+
+
+def batched_t_apply(staged: StagedT, x: jnp.ndarray) -> jnp.ndarray:
+    """Per-matrix Tbar_b x_b: tables (B, S, P), x (B, ..., n)."""
+    return jax.vmap(staged_t_apply, in_axes=(_T_AXES, 0))(staged, x)
+
+
+def batched_sym_operator_apply(fwd: StagedG, adj: StagedG,
+                               diag: jnp.ndarray,
+                               x: jnp.ndarray) -> jnp.ndarray:
+    """y_b = Ubar_b diag(d_b) Ubar_b^T x_b for every b: diag (B, n),
+    x (B, ..., n)."""
+    return jax.vmap(sym_operator_apply,
+                    in_axes=(_G_AXES, _G_AXES, 0, 0))(fwd, adj, diag, x)
+
+
+def batched_gen_operator_apply(fwd: StagedT, inv: StagedT,
+                               diag: jnp.ndarray,
+                               x: jnp.ndarray) -> jnp.ndarray:
+    """y_b = Tbar_b diag(d_b) Tbar_b^{-1} x_b for every b."""
+    return jax.vmap(gen_operator_apply,
+                    in_axes=(_T_AXES, _T_AXES, 0, 0))(fwd, inv, diag, x)
 
 
 def gen_operator_apply(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,

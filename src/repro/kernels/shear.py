@@ -16,6 +16,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core.staging import StagedT
+from .butterfly import _batched_table_spec
 
 DEFAULT_BLOCK_B = 128
 
@@ -108,3 +109,51 @@ def gen_operator_apply(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
         interpret=interpret,
     )(*tables, xp)
     return out[:, :n]
+
+
+def _batched_fused_gen_kernel(iii_ref, ijj_ref, ia_ref, ib_ref,
+                              fii_ref, fjj_ref, fa_ref, fb_ref,
+                              d_ref, x_ref, o_ref):
+    """One grid cell = (matrix b, signal tile i); mirrors the batched
+    butterfly kernel (DESIGN.md §7)."""
+    x = x_ref[0]
+    dt = x.dtype
+
+    def inv_body(st, xc):
+        return _stage_body(xc, iii_ref[0, st], ijj_ref[0, st],
+                           ia_ref[0, st].astype(dt), ib_ref[0, st].astype(dt))
+
+    x = lax.fori_loop(0, iii_ref.shape[1], inv_body, x)
+    x = x * d_ref[0].astype(dt)[None, :]
+
+    def fwd_body(st, xc):
+        return _stage_body(xc, fii_ref[0, st], fjj_ref[0, st],
+                           fa_ref[0, st].astype(dt), fb_ref[0, st].astype(dt))
+
+    o_ref[0] = lax.fori_loop(0, fii_ref.shape[1], fwd_body, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def batched_gen_operator_apply(fwd: StagedT, inv: StagedT,
+                               diag: jnp.ndarray, x: jnp.ndarray,
+                               block_b: int = DEFAULT_BLOCK_B,
+                               interpret: bool = True) -> jnp.ndarray:
+    """y[b] = Tbar_b diag(d_b) Tbar_b^{-1} x[b] for a batch of directed
+    factorizations: tables (B, S, P), diag (B, n), x (B, R, n)."""
+    b, r, n = x.shape
+    bb = min(block_b, r)
+    grid = (b, pl.cdiv(r, bb))
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 1)))
+    dp = jnp.pad(diag, ((0, 0), (0, 1)), constant_values=1.0)
+    tables = (inv.idx_i, inv.idx_j, inv.alpha, inv.beta,
+              fwd.idx_i, fwd.idx_j, fwd.alpha, fwd.beta, dp)
+    out = pl.pallas_call(
+        _batched_fused_gen_kernel,
+        grid=grid,
+        in_specs=[_batched_table_spec(t) for t in tables]
+        + [pl.BlockSpec((1, bb, n + 1), lambda bm, i: (bm, i, 0))],
+        out_specs=pl.BlockSpec((1, bb, n + 1), lambda bm, i: (bm, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, n + 1), x.dtype),
+        interpret=interpret,
+    )(*tables, xp)
+    return out[..., :n]

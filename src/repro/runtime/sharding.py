@@ -12,6 +12,7 @@ Logical axes used by the model zoo:
 """
 from __future__ import annotations
 
+import itertools
 from typing import Any, Dict, Optional
 
 import jax
@@ -23,6 +24,32 @@ from repro.models.common import Axes, ModelConfig
 
 def dp_axes(mesh: Mesh):
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def matrix_batch_sharding(mesh: Mesh, ndim: int,
+                          batch: Optional[int] = None) -> NamedSharding:
+    """Sharding for a leading matrix-batch axis (the batched eigenspace
+    engine, DESIGN.md §7): axis 0 (the B independent matrices /
+    factorizations / signal blocks) spreads over the data-parallel mesh
+    axes, everything else is replicated.  Used by
+    core/eigenbasis.py::ApproxEigenbasis for (B, n, n) inputs, (B, S, P)
+    staged tables and (B, R, n) signal batches.
+
+    ``batch``: the leading-dim size; the largest (order-preserving) subset
+    of data-parallel axes whose product divides it is used, so an awkward
+    B degrades to partial sharding or replication instead of raising a
+    divisibility error (e.g. (pod=4, data=2) with B=6 shards over "data"
+    alone rather than replicating)."""
+    dp = dp_axes(mesh)
+    if batch is not None:
+        best, best_p = (), 1
+        for r in range(len(dp), 0, -1):
+            for combo in itertools.combinations(dp, r):
+                p = int(np.prod([mesh.shape[a] for a in combo]))
+                if p > best_p and batch % p == 0:
+                    best, best_p = combo, p
+        dp = best
+    return NamedSharding(mesh, P(dp or None, *(None,) * (ndim - 1)))
 
 
 def make_rules(mesh: Mesh, cfg: ModelConfig, *, fsdp: bool = False,

@@ -45,6 +45,11 @@ _SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    not hasattr(__import__("jax"), "shard_map"),
+    reason="nested partial-manual shard_map needs jax>=0.6: the 0.4.x XLA "
+           "aborts with 'Check failed: sharding.IsManualSubgroup()' "
+           "(runtime/steps.py shims the API, but not the compiler)")
 def test_pod_compressed_step_runs_and_reduces_cross_pod(tmp_path):
     out = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
