@@ -6,7 +6,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (approximate_symmetric, factorize_orthonormal,
-                        g_objective, g_to_dense, laplacian,
+                        g_objective, laplacian,
                         lemma1_spectrum)
 from repro.graphs import erdos_renyi
 from .common import emit

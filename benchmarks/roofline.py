@@ -3,7 +3,6 @@ repro.launch.dryrun) and emits the per-(arch x shape x mesh) three-term
 table for EXPERIMENTS.md §Roofline."""
 import glob
 import json
-import os
 import pathlib
 
 from .common import emit

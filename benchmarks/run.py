@@ -1,43 +1,88 @@
-"""Benchmark harness: one module per paper table/figure + roofline.
+"""Benchmark harness: one module per paper table/figure + micro/roofline.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig1,fig5]
+Benchmarks are DISCOVERED, not hand-registered: every ``*.py`` module in
+this package (except this runner and ``common.py``) that exposes a
+``run(fast: bool)`` callable is picked up automatically, so a new
+``figN_*.py`` is runnable the moment the file exists.  ``fig*`` modules
+are addressable by their short prefix (``--only fig8``) or full stem.
+
+  PYTHONPATH=src python -m benchmarks.run --all [--fast]
+  PYTHONPATH=src python -m benchmarks.run --only fig1,fig8 --fast
+  PYTHONPATH=src python -m benchmarks.run --list
 """
 import argparse
+import importlib
+import pathlib
 import sys
 import time
 import traceback
 
-from . import (fig1_graph_accuracy, fig2_fgft_comparison, fig4_vs_directU,
-               fig5_random_matrices, fig6_speedup, fig7_batched,
-               kernels_micro, roofline)
+_SKIP = {"run", "common", "__init__"}
 
-BENCHES = {
-    "fig1": fig1_graph_accuracy.run,
-    "fig2_fig3": fig2_fgft_comparison.run,
-    "fig4": fig4_vs_directU.run,
-    "fig5": fig5_random_matrices.run,
-    "fig6": fig6_speedup.run,
-    "fig7": fig7_batched.run,
-    "kernels": kernels_micro.run,
-    "roofline": roofline.run,
-}
+
+def discover():
+    """Returns (benches, aliases).
+
+    ``benches``: full module stem -> run callable, for every benchmark
+    module in the package.  ``aliases``: short ``figN`` prefix -> full
+    stem, registered only when the prefix is unambiguous and is not
+    itself a module name (a real ``fig9.py`` always wins over an alias).
+    """
+    benches = {}
+    here = pathlib.Path(__file__).parent
+    for path in sorted(here.glob("*.py")):
+        stem = path.stem
+        if stem in _SKIP or stem.startswith("_"):
+            continue
+        mod = importlib.import_module(f".{stem}", __package__)
+        fn = getattr(mod, "run", None)
+        if not callable(fn):
+            raise RuntimeError(
+                f"benchmark module {stem}.py has no run(fast) entry point")
+        benches[stem] = fn
+    aliases = {}
+    for stem in benches:
+        short = stem.split("_")[0]
+        if stem.startswith("fig") and short != stem and short not in benches:
+            # ambiguous prefixes (two figN_* modules) get no alias
+            aliases[short] = None if short in aliases else stem
+    return benches, {k: v for k, v in aliases.items() if v is not None}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced sizes/seeds for smoke runs")
+    ap.add_argument("--all", action="store_true",
+                    help="run every discovered benchmark")
     ap.add_argument("--only", default="",
-                    help="comma-separated subset of benches")
+                    help="comma-separated subset (short fig aliases ok)")
+    ap.add_argument("--list", action="store_true",
+                    help="print discovered benchmarks and exit")
     args = ap.parse_args(argv)
-    only = set(filter(None, args.only.split(",")))
+    benches, aliases = discover()
+    if args.list:
+        for name in sorted(benches):
+            print(name)
+        return 0
+    selected = set()
+    for token in filter(None, args.only.split(",")):
+        if token in benches:
+            selected.add(token)
+        elif token in aliases:
+            selected.add(aliases[token])
+        else:
+            ap.error(f"unknown benchmark {token!r}; discovered: "
+                     f"{sorted(benches)} (aliases: {sorted(aliases)})")
+    if not selected and not args.all:
+        ap.error("pass --all to run every benchmark, or --only <names>")
     failures = 0
-    for name, fn in BENCHES.items():
-        if only and name not in only:
+    for name in sorted(benches):
+        if selected and name not in selected:
             continue
         t0 = time.time()
         try:
-            fn(fast=args.fast)
+            benches[name](fast=args.fast)
             print(f"[{name} done in {time.time() - t0:.1f}s]")
         except Exception:  # noqa: BLE001 — report all benches
             failures += 1

@@ -5,7 +5,6 @@ via the polar decomposition, and measure accuracy vs apply cost.
   PYTHONPATH=src python examples/compress_projection.py
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import compress_linear, compressed_linear_apply

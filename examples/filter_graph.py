@@ -1,0 +1,70 @@
+"""Filtering graph signals through the spectral subsystem, end to end:
+fit a fleet of graphs once, then denoise, wavelet-analyze, and compress
+signals through the fused filter-bank path (DESIGN.md §8).
+
+  PYTHONPATH=src python examples/filter_graph.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ApproxEigenbasis, laplacian
+from repro.graphs import community_graph, sensor_graph
+from repro.spectral import (SpectralFilterBank, chebyshev_filter, compress,
+                            hammond_bank, named_responses, tikhonov)
+
+
+def main():
+    n, b = 96, 4
+    g = int(2 * n * np.log2(n))
+    rng = np.random.default_rng(0)
+
+    # --- one batched fit for a fleet of graphs --------------------------
+    adjs = [community_graph(n, seed=s) if s % 2 == 0
+            else sensor_graph(n, seed=s) for s in range(b)]
+    laps = np.stack([laplacian(a) for a in adjs])
+    basis = ApproxEigenbasis.fit(jnp.asarray(laps), g, n_iter=3)
+    rel = np.asarray(basis.objective) / (laps * laps).sum((1, 2))
+    print(f"fitted {b} graphs (n={n}, g={g}) in one jit; "
+          f"rel errors {np.round(rel, 4)}")
+
+    # --- denoise a smooth signal with the Tikhonov response -------------
+    # ground truth: a low-frequency mixture per graph (smooth on the graph)
+    _, u = zip(*(np.linalg.eigh(lp) for lp in laps))
+    clean = np.stack([ui[:, 1:4] @ rng.standard_normal(3) for ui in u])
+    clean = (clean / np.abs(clean).max(1, keepdims=True)).astype(np.float32)
+    noisy = clean + 0.3 * rng.standard_normal(clean.shape).astype(np.float32)
+    denoised = basis.project(jnp.asarray(noisy[:, None, :]),
+                             h=tikhonov(8.0))[:, 0]
+    mse = lambda a, c: float(((a - c) ** 2).mean())  # noqa: E731
+    print(f"Tikhonov denoising MSE {mse(noisy, clean):.4f} -> "
+          f"{mse(np.asarray(denoised), clean):.4f}")
+
+    # --- a whole filter bank in ONE fused dispatch ----------------------
+    bank = SpectralFilterBank(
+        basis, {**named_responses("heat,lowpass,highpass"),
+                **hammond_bank(num_scales=3)})
+    x = jnp.asarray(noisy[:, None, :])
+    y = bank.apply(x)                       # (B, F, 1, n)
+    energy = np.asarray((y * y).sum(-1))[:, :, 0]
+    print(f"bank of {len(bank)} filters x {b} graphs in one dispatch:")
+    for f, name in enumerate(bank.names):
+        print(f"  {name:12s} mean output energy {energy[:, f].mean():9.3f}")
+
+    # --- top-k spectral compression (drop_frequency, vectorized) --------
+    for k in (8, 16, 32):
+        c = compress(basis, jnp.asarray(noisy), k)
+        err = np.linalg.norm(np.asarray(c.recon) - noisy, axis=-1)
+        err /= np.linalg.norm(noisy, axis=-1)
+        print(f"top-{k:2d}: retained energy "
+              f"{float(np.asarray(c.retained_energy).mean()):.3f}, "
+              f"rel reconstruction error {err.mean():.3f}")
+
+    # --- the no-eigendecomposition baseline on one graph ----------------
+    ycheb = chebyshev_filter(jnp.asarray(laps[0]), tikhonov(8.0),
+                             jnp.asarray(noisy[0]), degree=12)
+    print(f"Chebyshev(12) baseline MSE on graph 0: "
+          f"{mse(np.asarray(ycheb), clean[0]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,6 @@ same code path drives the production mesh.
 """
 import argparse
 
-from repro.configs import get_config
 from repro.launch import train as train_mod
 from repro.models import transformer as tfm
 

@@ -25,7 +25,6 @@ import numpy as np
 from . import gtransform as gt
 from .baselines import factorize_orthonormal
 from .staging import StagedG, pack_g, pack_g_adjoint
-from .types import GFactors
 
 
 class ButterflyParams(NamedTuple):

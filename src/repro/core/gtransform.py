@@ -292,7 +292,6 @@ def _polish_block(a_ii, a_jj, a_ij, b_ii, b_jj, b_ij, m11, m12, m21, m22,
     """
     da, db = a_ii - a_jj, b_ii - b_jj
     theta_old = jnp.arctan2(s_old, c_old)
-    ninf = jnp.asarray(_NEG_INF, a_ii.dtype)
 
     # f = 1: rotation G = [[c, s], [-s, c]]
     k1r = 0.5 * da * db + 2.0 * a_ij * b_ij
@@ -317,7 +316,6 @@ def _polish_block(a_ii, a_jj, a_ij, b_ii, b_jj, b_ij, m11, m12, m21, m22,
     c = jnp.cos(theta)
     s = jnp.sin(theta)
     sigma = jnp.where(use_rot, 1.0, -1.0).astype(c.dtype)
-    del ninf
     return c, s, sigma
 
 

@@ -23,7 +23,7 @@ from typing import NamedTuple, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from .types import GFactors, SCALE, SHEAR, TFactors
+from .types import GFactors, SCALE, TFactors
 
 
 class StagedG(NamedTuple):

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator
 
 import numpy as np
 

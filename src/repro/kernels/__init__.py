@@ -1,2 +1,2 @@
 """Pallas TPU kernels (validated in interpret mode) + XLA reference path."""
-from . import ops, ref, butterfly, shear
+from . import ops, ref, butterfly, shear, spectral

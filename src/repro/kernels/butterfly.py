@@ -166,6 +166,42 @@ def batched_sym_operator_apply(fwd: StagedG, adj: StagedG,
     return out[..., :n]
 
 
+def _batched_butterfly_kernel(ii_ref, jj_ref, c_ref, s_ref, sg_ref,
+                              x_ref, o_ref):
+    """Plain batched apply: one grid cell = (matrix b, signal tile i)."""
+    x = x_ref[0]
+    dt = x.dtype
+
+    def body(st, xc):
+        return _stage_body(xc, ii_ref[0, st], jj_ref[0, st],
+                           c_ref[0, st].astype(dt), s_ref[0, st].astype(dt),
+                           sg_ref[0, st].astype(dt))
+
+    o_ref[0] = lax.fori_loop(0, ii_ref.shape[1], body, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def batched_butterfly_apply(staged: StagedG, x: jnp.ndarray,
+                            block_b: int = DEFAULT_BLOCK_B,
+                            interpret: bool = True) -> jnp.ndarray:
+    """y[b] = Ubar_b x[b]: tables (B, S, P), x (B, R, n) -> (B, R, n)."""
+    b, r, n = x.shape
+    bb = min(block_b, r)
+    grid = (b, pl.cdiv(r, bb))
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 1)))
+    tables = (staged.idx_i, staged.idx_j, staged.c, staged.s, staged.sigma)
+    out = pl.pallas_call(
+        _batched_butterfly_kernel,
+        grid=grid,
+        in_specs=[_batched_table_spec(t) for t in tables]
+        + [pl.BlockSpec((1, bb, n + 1), lambda bm, i: (bm, i, 0))],
+        out_specs=pl.BlockSpec((1, bb, n + 1), lambda bm, i: (bm, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, n + 1), x.dtype),
+        interpret=interpret,
+    )(*tables, xp)
+    return out[..., :n]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_b", "interpret"))
 def sym_operator_apply(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,

@@ -24,6 +24,7 @@ from repro.core.types import GFactors, TFactors
 from . import butterfly as _bf
 from . import ref as _ref
 from . import shear as _sh
+from . import spectral as _sp
 
 
 def g_apply(staged: StagedG, x: jnp.ndarray, backend: str = "xla",
@@ -130,21 +131,100 @@ def batched_gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
     raise ValueError(f"unknown backend {backend!r}")
 
 
+# ---------------------------------------------------------------------------
+# Filter banks: F spectral responses served through ONE analysis pass
+# (repro/spectral/filters.py; DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def sym_filter_bank(fwd: StagedG, adj: StagedG, gains: jnp.ndarray,
+                    x: jnp.ndarray, backend: str = "xla",
+                    interpret: bool = True) -> jnp.ndarray:
+    """y[f] = Ubar diag(gains_f) Ubar^T x for a bank of F filters.
+
+    ``gains``: (F, n), ``x``: (..., n) -> (F, ..., n).  The analysis leg
+    runs once and is shared by all F filters; the pallas path additionally
+    fuses the whole bank into one kernel launch (kernels/spectral.py)."""
+    if backend == "xla":
+        return _ref.sym_filter_bank_apply(fwd, adj, gains, x)
+    if backend == "pallas":
+        flat = x.reshape(-1, x.shape[-1])
+        out = _sp.sym_filter_bank_apply(fwd, adj, gains, flat,
+                                        interpret=interpret)
+        return out.reshape((gains.shape[0],) + x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def gen_filter_bank(fwd: StagedT, inv: StagedT, gains: jnp.ndarray,
+                    x: jnp.ndarray, backend: str = "xla",
+                    interpret: bool = True) -> jnp.ndarray:
+    """y[f] = Tbar diag(gains_f) Tbar^{-1} x — the directed bank."""
+    if backend == "xla":
+        return _ref.gen_filter_bank_apply(fwd, inv, gains, x)
+    if backend == "pallas":
+        flat = x.reshape(-1, x.shape[-1])
+        out = _sp.gen_filter_bank_apply(fwd, inv, gains, flat,
+                                        interpret=interpret)
+        return out.reshape((gains.shape[0],) + x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def batched_sym_filter_bank(fwd: StagedG, adj: StagedG, gains: jnp.ndarray,
+                            x: jnp.ndarray, backend: str = "xla",
+                            interpret: bool = True) -> jnp.ndarray:
+    """Per-matrix banks: tables (B, S, P), gains (B, F, n), x (B, ..., n)
+    -> (B, F, ..., n); one dispatch serves every (matrix, filter) pair."""
+    if backend == "xla":
+        return _ref.batched_sym_filter_bank_apply(fwd, adj, gains, x)
+    if backend == "pallas":
+        b = x.shape[0]
+        flat = x.reshape(b, -1, x.shape[-1])
+        out = _sp.batched_sym_filter_bank_apply(fwd, adj, gains, flat,
+                                                interpret=interpret)
+        return out.reshape((b, gains.shape[1]) + x.shape[1:])
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def batched_gen_filter_bank(fwd: StagedT, inv: StagedT, gains: jnp.ndarray,
+                            x: jnp.ndarray, backend: str = "xla",
+                            interpret: bool = True) -> jnp.ndarray:
+    """Directed per-matrix banks: gains (B, F, n), x (B, ..., n)."""
+    if backend == "xla":
+        return _ref.batched_gen_filter_bank_apply(fwd, inv, gains, x)
+    if backend == "pallas":
+        b = x.shape[0]
+        flat = x.reshape(b, -1, x.shape[-1])
+        out = _sp.batched_gen_filter_bank_apply(fwd, inv, gains, flat,
+                                                interpret=interpret)
+        return out.reshape((b, gains.shape[1]) + x.shape[1:])
+    raise ValueError(f"unknown backend {backend!r}")
+
+
 def batched_g_apply(staged: StagedG, x: jnp.ndarray,
-                    backend: str = "xla") -> jnp.ndarray:
-    """y[b] = Ubar_b x[b]: tables (B, S, P), x (B, ..., n).  XLA only —
-    the fused operators above are the Pallas-accelerated paths."""
-    if backend != "xla":
-        raise ValueError("batched_g_apply supports backend='xla' only")
-    return _ref.batched_g_apply(staged, x)
+                    backend: str = "xla",
+                    interpret: bool = True) -> jnp.ndarray:
+    """y[b] = Ubar_b x[b]: tables (B, S, P), x (B, ..., n)."""
+    if backend == "xla":
+        return _ref.batched_g_apply(staged, x)
+    if backend == "pallas":
+        b = x.shape[0]
+        flat = x.reshape(b, -1, x.shape[-1])
+        return _bf.batched_butterfly_apply(
+            staged, flat, interpret=interpret).reshape(x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
 
 
 def batched_t_apply(staged: StagedT, x: jnp.ndarray,
-                    backend: str = "xla") -> jnp.ndarray:
-    """y[b] = Tbar_b x[b]: tables (B, S, P), x (B, ..., n).  XLA only."""
-    if backend != "xla":
-        raise ValueError("batched_t_apply supports backend='xla' only")
-    return _ref.batched_t_apply(staged, x)
+                    backend: str = "xla",
+                    interpret: bool = True) -> jnp.ndarray:
+    """y[b] = Tbar_b x[b]: tables (B, S, P), x (B, ..., n)."""
+    if backend == "xla":
+        return _ref.batched_t_apply(staged, x)
+    if backend == "pallas":
+        b = x.shape[0]
+        flat = x.reshape(b, -1, x.shape[-1])
+        return _sh.batched_shear_apply(
+            staged, flat, interpret=interpret).reshape(x.shape)
+    raise ValueError(f"unknown backend {backend!r}")
 
 
 def stage_g(factors: GFactors):

@@ -107,3 +107,52 @@ def gen_operator_apply(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
     y = staged_t_apply(inv, x)
     y = y * diag.astype(y.dtype)
     return staged_t_apply(fwd, y)
+
+
+# ---------------------------------------------------------------------------
+# Filter-bank oracles: F spectral filters share ONE analysis pass
+# (repro/spectral/filters.py; DESIGN.md §8).  Semantics of record for
+# kernels/spectral.py.
+# ---------------------------------------------------------------------------
+
+
+def _bank_scale(coeff: jnp.ndarray, gains: jnp.ndarray) -> jnp.ndarray:
+    """(..., n) coefficients x (F, n) gains -> (F, ..., n) scaled copies."""
+    g = gains.reshape((gains.shape[0],) + (1,) * (coeff.ndim - 1)
+                      + (gains.shape[-1],))
+    return coeff[None] * g.astype(coeff.dtype)
+
+
+def sym_filter_bank_apply(fwd: StagedG, adj: StagedG, gains: jnp.ndarray,
+                          x: jnp.ndarray) -> jnp.ndarray:
+    """y[f] = Ubar diag(gains_f) Ubar^T x for a bank of F filters.
+
+    ``gains``: (F, n), ``x``: (..., n) -> (F, ..., n).  The analysis
+    transform runs ONCE and is reused by every filter — the three-pass
+    composition pays it F times (DESIGN.md §8)."""
+    coeff = staged_g_apply(adj, x)
+    return staged_g_apply(fwd, _bank_scale(coeff, gains))
+
+
+def gen_filter_bank_apply(fwd: StagedT, inv: StagedT, gains: jnp.ndarray,
+                          x: jnp.ndarray) -> jnp.ndarray:
+    """y[f] = Tbar diag(gains_f) Tbar^{-1} x — the directed bank."""
+    coeff = staged_t_apply(inv, x)
+    return staged_t_apply(fwd, _bank_scale(coeff, gains))
+
+
+def batched_sym_filter_bank_apply(fwd: StagedG, adj: StagedG,
+                                  gains: jnp.ndarray,
+                                  x: jnp.ndarray) -> jnp.ndarray:
+    """Per-matrix banks: tables (B, S, P), gains (B, F, n), x (B, ..., n)
+    -> (B, F, ..., n)."""
+    return jax.vmap(sym_filter_bank_apply,
+                    in_axes=(_G_AXES, _G_AXES, 0, 0))(fwd, adj, gains, x)
+
+
+def batched_gen_filter_bank_apply(fwd: StagedT, inv: StagedT,
+                                  gains: jnp.ndarray,
+                                  x: jnp.ndarray) -> jnp.ndarray:
+    """Directed per-matrix banks: gains (B, F, n), x (B, ..., n)."""
+    return jax.vmap(gen_filter_bank_apply,
+                    in_axes=(_T_AXES, _T_AXES, 0, 0))(fwd, inv, gains, x)

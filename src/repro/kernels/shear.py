@@ -111,6 +111,40 @@ def gen_operator_apply(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
     return out[:, :n]
 
 
+def _batched_shear_kernel(ii_ref, jj_ref, a_ref, b_ref, x_ref, o_ref):
+    """Plain batched apply: one grid cell = (matrix b, signal tile i)."""
+    x = x_ref[0]
+    dt = x.dtype
+
+    def body(st, xc):
+        return _stage_body(xc, ii_ref[0, st], jj_ref[0, st],
+                           a_ref[0, st].astype(dt), b_ref[0, st].astype(dt))
+
+    o_ref[0] = lax.fori_loop(0, ii_ref.shape[1], body, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def batched_shear_apply(staged: StagedT, x: jnp.ndarray,
+                        block_b: int = DEFAULT_BLOCK_B,
+                        interpret: bool = True) -> jnp.ndarray:
+    """y[b] = Tbar_b x[b]: tables (B, S, P), x (B, R, n) -> (B, R, n)."""
+    b, r, n = x.shape
+    bb = min(block_b, r)
+    grid = (b, pl.cdiv(r, bb))
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 1)))
+    tables = (staged.idx_i, staged.idx_j, staged.alpha, staged.beta)
+    out = pl.pallas_call(
+        _batched_shear_kernel,
+        grid=grid,
+        in_specs=[_batched_table_spec(t) for t in tables]
+        + [pl.BlockSpec((1, bb, n + 1), lambda bm, i: (bm, i, 0))],
+        out_specs=pl.BlockSpec((1, bb, n + 1), lambda bm, i: (bm, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, n + 1), x.dtype),
+        interpret=interpret,
+    )(*tables, xp)
+    return out[..., :n]
+
+
 def _batched_fused_gen_kernel(iii_ref, ijj_ref, ia_ref, ib_ref,
                               fii_ref, fjj_ref, fa_ref, fb_ref,
                               d_ref, x_ref, o_ref):

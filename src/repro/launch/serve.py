@@ -9,6 +9,11 @@ CPU smoke (FGFT — many graphs per step, DESIGN.md §7):
   python -m repro.launch.serve --fgft --graphs 8 --graph-n 64 \
       --transforms 384 --filter-steps 20
 
+CPU smoke (spectral filter bank — F responses per graph per step through
+the fused analysis->scale->synthesis path, DESIGN.md §8):
+  python -m repro.launch.serve --filter heat,tikhonov,wavelets:4 \
+      --graphs 8 --graph-n 64 --filter-steps 20
+
 The LM engine keeps a fixed pool of batch slots; finished requests release
 their slot and the next queued request prefills into it (continuous
 batching at slot granularity — decode never stalls on stragglers within
@@ -58,9 +63,17 @@ def parse_args(argv=None):
     ap.add_argument("--signals", type=int, default=32,
                     help="signal rows filtered per graph per step")
     ap.add_argument("--backend", choices=("xla", "pallas"), default="xla")
+    ap.add_argument("--filter", default=None,
+                    help="serve a spectral filter BANK through the fused "
+                         "analysis->scale->synthesis path (implies "
+                         "--fgft); comma-separated responses, e.g. "
+                         "'heat:3.0,tikhonov,lowpass,wavelets:4' "
+                         "(repro/spectral/filters.py::named_responses)")
     args = ap.parse_args(argv)
+    if args.filter:
+        args.fgft = True
     if not args.fgft and args.arch is None:
-        ap.error("--arch is required unless --fgft is given")
+        ap.error("--arch is required unless --fgft/--filter is given")
     return args
 
 
@@ -72,7 +85,8 @@ class FGFTServeEngine:
     one batched fused-kernel dispatch (DESIGN.md §7)."""
 
     def __init__(self, laps: jnp.ndarray, num_transforms: int,
-                 n_iter: int = 3, backend: str = "xla", mesh=None):
+                 n_iter: int = 3, backend: str = "xla", mesh=None,
+                 filters: Optional[str] = None):
         # deferred import: repro.core builds jnp constants at import time,
         # and launch modules must not touch jax state before mesh setup
         from repro.core import ApproxEigenbasis
@@ -87,11 +101,28 @@ class FGFTServeEngine:
         self._step = jax.jit(
             lambda x, d: self.basis.project(x, h=lambda _: d,
                                             backend=self.backend))
+        self.bank = None
+        if filters:
+            from repro.spectral import SpectralFilterBank, named_responses
+            self.bank = SpectralFilterBank(self.basis,
+                                           named_responses(filters))
+            # the whole bank in one fused dispatch: analysis runs once per
+            # signal block, every response reuses its coefficients
+            # (kernels/spectral.py; DESIGN.md §8)
+            self._bank_step = jax.jit(
+                lambda x: self.bank.apply(x, backend=self.backend))
 
     def step(self, signals: jnp.ndarray, h=None) -> jnp.ndarray:
         """Filter one (B, R, n) signal block on every graph at once."""
         d = self.basis.spectrum if h is None else h(self.basis.spectrum)
         return self._step(signals, d)
+
+    def step_bank(self, signals: jnp.ndarray) -> jnp.ndarray:
+        """All F bank responses on every graph: (B, R, n) ->
+        (B, F, R, n), one fused dispatch."""
+        if self.bank is None:
+            raise ValueError("engine was built without --filter responses")
+        return self._bank_step(signals)
 
 
 def serve_fgft(args) -> dict:
@@ -106,13 +137,31 @@ def serve_fgft(args) -> dict:
     mesh = make_local_mesh()
     t0 = time.time()
     engine = FGFTServeEngine(jnp.asarray(laps), g, backend=args.backend,
-                             mesh=mesh)
+                             mesh=mesh, filters=args.filter)
     fit_s = time.time() - t0
     rel = np.asarray(engine.basis.objective) / (laps * laps).sum((1, 2))
     rng = np.random.default_rng(args.seed)
-    lowpass = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
     x = jnp.asarray(rng.standard_normal(
         (b, args.signals, n)).astype(np.float32))
+    print(f"[fgft] fitted {b} graphs (n={n}, g={g}) in one jit: "
+          f"{fit_s:.1f}s, mean rel error {rel.mean():.4f}")
+    if args.filter:
+        f = len(engine.bank)
+        y = jax.block_until_ready(engine.step_bank(x))   # warmup/compile
+        t0 = time.time()
+        for _ in range(args.filter_steps):
+            y = engine.step_bank(x)
+        jax.block_until_ready(y)
+        dt = max(time.time() - t0, 1e-9)
+        served = args.filter_steps * b * f
+        print(f"[fgft] served {served} filter responses "
+              f"({f} filters x {b} graphs x {args.filter_steps} steps, "
+              f"{args.signals} signals each) in {dt:.2f}s — "
+              f"{served / dt:.1f} responses/s through the fused bank "
+              f"path [{args.backend}]")
+        return {"rel_error": rel, "responses_per_s": served / dt,
+                "filters": engine.bank.names}
+    lowpass = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
     y = jax.block_until_ready(engine.step(x, lowpass))   # warmup/compile
     t0 = time.time()
     for _ in range(args.filter_steps):
@@ -120,8 +169,6 @@ def serve_fgft(args) -> dict:
     jax.block_until_ready(y)
     dt = max(time.time() - t0, 1e-9)                     # --filter-steps 0 ok
     served = args.filter_steps * b
-    print(f"[fgft] fitted {b} graphs (n={n}, g={g}) in one jit: "
-          f"{fit_s:.1f}s, mean rel error {rel.mean():.4f}")
     print(f"[fgft] served {served} graph-filter requests "
           f"({served * args.signals} signals) in {dt:.2f}s — "
           f"{served / dt:.1f} graph-transforms/s [{args.backend}]")

@@ -23,7 +23,6 @@ import pathlib
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_recipe

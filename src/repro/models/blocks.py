@@ -15,7 +15,7 @@ import numpy as np
 from jax import lax
 
 from .common import (ModelConfig, apply_rope, attention, constrain_dims,
-                     constrain_tokens, param, rmsnorm, rope_tables, softcap)
+                     constrain_tokens, param, rmsnorm, rope_tables)
 
 Params = Dict[str, Any]
 

@@ -23,7 +23,6 @@ API (all pure functions):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -466,7 +465,6 @@ def decode_step(params: Params, cfg: ModelConfig, cache, batch):
     are ring buffers indexed by pos % window."""
     tok = batch["token"]
     pos = batch["pos"]
-    b = tok.shape[0]
     x = params["embed"].astype(cfg.dtype)[tok] * float(np.sqrt(cfg.d_model))
     positions = pos[:, None]
     memory = batch.get("memory")

@@ -6,7 +6,7 @@ params is data-sharded and the moments inherit it).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

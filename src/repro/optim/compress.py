@@ -17,7 +17,6 @@ unit tests and by the optimizer integration.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Tuple
 
 import jax

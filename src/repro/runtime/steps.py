@@ -4,8 +4,7 @@ butterfly gradient-compression path (cross-pod, shard_map psum).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -149,7 +148,6 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, seq_len: int,
         mode="train")
     spec = (compress.make_spec(ratio=grad_compress_ratio)
             if use_comp else None)
-    has_pod = "pod" in mesh.axis_names
 
     bx_axes, bx_total = _batch_axes_of(rules, mesh)
     model_n = mesh.shape.get("model", 1)

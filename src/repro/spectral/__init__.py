@@ -1,0 +1,16 @@
+"""Graph spectral operations served through the batched FGFT engine.
+
+The application layer on top of ``ApproxEigenbasis`` (DESIGN.md §8):
+filter banks (filters.py) dispatched through the fused Pallas bank kernel
+(kernels/spectral.py), top-k coefficient compression (compress.py), and
+the Chebyshev matched-FLOPs baseline (chebyshev.py).
+"""
+from .filters import (RESPONSES, Response, SpectralFilter,
+                      SpectralFilterBank, bandpass, hammond_bank,
+                      hammond_kernel, heat, highpass, lowpass,
+                      named_responses, response_lipschitz, tikhonov,
+                      wavelet_scales)
+from .compress import Compressed, compress, compression_error, \
+    topk_coefficients
+from .chebyshev import (chebyshev_apply, chebyshev_coefficients,
+                        chebyshev_filter, estimate_lmax, matched_degree)

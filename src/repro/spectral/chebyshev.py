@@ -1,0 +1,120 @@
+"""Chebyshev polynomial graph filtering — the no-eigendecomposition
+baseline (Hammond et al., arXiv:0912.3848 §6; DESIGN.md §8).
+
+``h(L) x`` is approximated by a degree-K Chebyshev expansion of ``h`` on
+``[0, lmax]`` evaluated through K Laplacian matvecs — no factorization, no
+spectrum estimate.  This is the paper-adjacent alternative the spectral
+subsystem must beat on accuracy-at-matched-FLOPs: a fused FGFT filter
+costs ~12g flops per signal (analysis + synthesis at 6 flops per Givens
+transform, paper Table 1), a Chebyshev term costs one matvec (~2·nnz
+flops), so ``matched_degree`` converts a factorization budget into the
+equivalent polynomial degree and benchmarks/fig8_spectral.py reports both
+at the same flop count.
+
+Everything here is jit-friendly: coefficients are computed once on the
+host (numpy quadrature), the recurrence is a ``lax.fori_loop`` of matvecs.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def estimate_lmax(lap: np.ndarray, iters: int = 64,
+                  seed: int = 0) -> float:
+    """Largest-eigenvalue bound via power iteration, with a 1% safety
+    margin so the Chebyshev interval [0, lmax] covers the true spectrum.
+
+    ``lap``: (n, n) numpy/jax array (symmetric PSD Laplacian)."""
+    a = np.asarray(lap, np.float64)
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal(a.shape[0])
+    v /= np.linalg.norm(v)
+    lam = 1.0
+    for _ in range(iters):
+        w = a @ v
+        lam = float(np.linalg.norm(w))
+        if lam < 1e-30:
+            return 1e-12
+        v = w / lam
+    return 1.01 * lam
+
+
+def chebyshev_coefficients(response: Callable, degree: int, lmax: float,
+                           num_points: Optional[int] = None) -> jnp.ndarray:
+    """Chebyshev expansion coefficients of ``response`` on [0, lmax].
+
+    Chebyshev-Gauss quadrature at ``num_points`` nodes (default: 4x
+    oversampled, >= 32) mapped onto the spectral interval.  Returns
+    (degree + 1,) f32 with the k=0 term already halved, ready for the
+    recurrence in ``chebyshev_apply``."""
+    npts = num_points or max(4 * (degree + 1), 32)
+    theta = np.pi * (np.arange(npts) + 0.5) / npts
+    lam = (np.cos(theta) + 1.0) * (lmax / 2.0)
+    h = np.asarray(response(jnp.asarray(lam, jnp.float32)), np.float64)
+    ks = np.arange(degree + 1)
+    c = (2.0 / npts) * (h[None, :] * np.cos(ks[:, None] * theta[None, :])
+                        ).sum(axis=1)
+    c[0] /= 2.0
+    return jnp.asarray(c, jnp.float32)
+
+
+def chebyshev_apply(lap: jnp.ndarray, coeffs: jnp.ndarray, lmax: float,
+                    x: jnp.ndarray) -> jnp.ndarray:
+    """y ≈ h(L) x through the three-term recurrence.
+
+    ``lap``: (n, n) or (B, n, n); ``x``: (..., n) with a leading batch
+    matching ``lap`` when batched.  K = len(coeffs) - 1 matvecs."""
+    lap = jnp.asarray(lap, x.dtype)
+    half = jnp.asarray(lmax / 2.0, x.dtype)
+    if lap.ndim == 3:
+        mv = lambda v: jnp.einsum("bij,b...j->b...i", lap, v)  # noqa: E731
+    else:
+        mv = lambda v: jnp.einsum("ij,...j->...i", lap, v)     # noqa: E731
+    # shifted operator Lhat = L/(lmax/2) - I maps spectrum into [-1, 1]
+    op = lambda v: mv(v) / half - v                            # noqa: E731
+    if coeffs.shape[0] == 1:
+        return coeffs[0] * x
+    t0, t1 = x, op(x)
+    y = coeffs[0] * t0 + coeffs[1] * t1
+
+    def body(k, carry):
+        t_prev, t_cur, acc = carry
+        t_next = 2.0 * op(t_cur) - t_prev
+        return t_cur, t_next, acc + coeffs[k] * t_next
+
+    _, _, y = lax.fori_loop(2, coeffs.shape[0], body, (t0, t1, y))
+    return y
+
+
+def matched_degree(num_transforms: int, nnz: int,
+                   kind: str = "sym") -> int:
+    """Chebyshev degree whose matvec FLOPs match one fused FGFT filter.
+
+    G-transform filter: analysis + synthesis = 12g flops/signal (6 per
+    Givens each way); T-transforms average ~2 flops per component each
+    way.  One Chebyshev term = one sparse matvec = 2·nnz flops."""
+    flops = (12 if kind == "sym" else 4) * num_transforms
+    return max(int(round(flops / (2.0 * max(nnz, 1)))), 1)
+
+
+def chebyshev_filter(lap: jnp.ndarray, response: Callable, x: jnp.ndarray,
+                     degree: int = 30,
+                     lmax: Optional[float] = None) -> jnp.ndarray:
+    """Convenience one-shot: estimate lmax, expand ``response``, apply.
+
+    For a (B, n, n) batch, lmax is the MAX over every graph's spectral
+    bound — a graph whose spectrum pokes outside the Chebyshev interval
+    makes the recurrence diverge (T_k grows like cosh outside [-1, 1]).
+    For repeated filtering precompute ``chebyshev_coefficients`` once and
+    call ``chebyshev_apply`` inside jit."""
+    if lmax is None:
+        mats = np.asarray(lap)
+        if mats.ndim == 2:
+            mats = mats[None]
+        lmax = max(estimate_lmax(m) for m in mats)
+    coeffs = chebyshev_coefficients(response, degree, lmax)
+    return chebyshev_apply(jnp.asarray(lap), coeffs, lmax, x)

@@ -1,5 +1,4 @@
 """Checkpoint store: atomic commit, resume, retention, resharding path."""
-import pathlib
 
 import numpy as np
 import jax

@@ -1,7 +1,5 @@
 """Data pipeline determinism + sharding-rule unit tests."""
 import numpy as np
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (ApproxEigenbasis, approximate_general,
                         approximate_symmetric)
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 def _sym_batch(b, n, seed=0):

@@ -1,7 +1,6 @@
 """Fast graph Fourier transform (the paper's §5 application)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core import build_fgft, laplacian, relative_error
 from repro.graphs import (community_graph, erdos_renyi, sensor_graph,
@@ -20,7 +19,6 @@ def test_laplacian_properties():
 def test_undirected_fgft_accuracy_curve():
     a = community_graph(48, seed=1)
     lap = laplacian(a)
-    den = float((lap * lap).sum())
     errs = []
     for alpha in (0.5, 2.0):
         g = int(alpha * 48 * np.log2(48))

@@ -1,9 +1,7 @@
 """Unit tests for the symmetric-case G-transform factorization (Thm 1/2,
 Lemma 1, Algorithm 1)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import (approximate_symmetric, g_init, g_polish, g_objective,
                         g_to_dense, gapply, lemma1_spectrum)

@@ -1,8 +1,6 @@
 """Roofline-term derivation: HLO collective parsing + term math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.runtime import hlo_analysis as hlo
 

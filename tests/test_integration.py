@@ -2,8 +2,6 @@
 graph generators, and the attention consistency across impls."""
 import numpy as np
 import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.graphs import (community_graph, erdos_renyi, sensor_graph,
                           directed_variant, real_graph_standin)

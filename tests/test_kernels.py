@@ -1,7 +1,6 @@
 """Pallas kernels (interpret mode) vs the pure-jnp oracle: shape/dtype
 sweeps as required for every kernel."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

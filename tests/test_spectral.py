@@ -1,0 +1,256 @@
+"""Spectral subsystem: fused-kernel parity, filter correctness vs dense
+eigh, top-k compression round-trip bounds, Chebyshev baseline accuracy."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ApproxEigenbasis, laplacian
+from repro.graphs import community_graph, directed_variant
+from repro.kernels import ops, ref
+from repro.kernels import spectral as ksp
+from repro import spectral as sp
+
+N = 32
+BANK = "heat,tikhonov,lowpass,highpass,bandpass"
+
+
+@pytest.fixture(scope="module")
+def sym_batched():
+    laps = np.stack([laplacian(community_graph(N, seed=s))
+                     for s in range(3)])
+    return laps, ApproxEigenbasis.fit(jnp.asarray(laps), 4 * N, n_iter=2)
+
+
+@pytest.fixture(scope="module")
+def sym_single():
+    lap = laplacian(community_graph(N, seed=7))
+    return lap, ApproxEigenbasis.fit(jnp.asarray(lap), 4 * N, n_iter=2)
+
+
+@pytest.fixture(scope="module")
+def gen_batched():
+    laps = np.stack([laplacian(directed_variant(community_graph(N, seed=s),
+                                                seed=s))
+                     for s in range(2)])
+    return laps, ApproxEigenbasis.fit(jnp.asarray(laps), 4 * N, n_iter=2)
+
+
+def _signals(shape, seed=0, dtype=jnp.float32):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape), dtype)
+
+
+# -- fused kernel vs reference oracle parity -------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bank_kernel_matches_oracle_sym(sym_single, dtype):
+    _, basis = sym_single
+    gains = sp.SpectralFilterBank(basis, sp.named_responses(BANK)).gains()
+    x = _signals((9, N), seed=1, dtype=dtype)
+    want = ref.sym_filter_bank_apply(basis.fwd, basis.bwd, gains, x)
+    got = ksp.sym_filter_bank_apply(basis.fwd, basis.bwd, gains, x,
+                                    interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_bank_kernel_matches_oracle_batched(sym_batched):
+    _, basis = sym_batched
+    gains = sp.SpectralFilterBank(basis, sp.named_responses(BANK)).gains()
+    x = _signals((3, 5, N), seed=2)
+    want = ref.batched_sym_filter_bank_apply(basis.fwd, basis.bwd, gains, x)
+    got = ksp.batched_sym_filter_bank_apply(basis.fwd, basis.bwd, gains, x,
+                                            interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bank_kernel_matches_oracle_gen(gen_batched):
+    _, basis = gen_batched
+    gains = sp.SpectralFilterBank(basis, sp.named_responses(BANK)).gains()
+    x = _signals((2, 4, N), seed=3)
+    want = ref.batched_gen_filter_bank_apply(basis.fwd, basis.bwd, gains, x)
+    got = ksp.batched_gen_filter_bank_apply(basis.fwd, basis.bwd, gains, x,
+                                            interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_batched_plain_apply_pallas_parity(sym_batched):
+    """The batched plain-apply kernels (new backend='pallas' route)."""
+    _, basis = sym_batched
+    x = _signals((3, 7, N), seed=4)
+    np.testing.assert_allclose(
+        np.asarray(ops.batched_g_apply(basis.fwd, x, backend="pallas")),
+        np.asarray(ops.batched_g_apply(basis.fwd, x, backend="xla")),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_block_tiling_boundary():
+    """Signal rows not divisible by block_b exercise the grid edge."""
+    lap = laplacian(community_graph(16, seed=0))
+    basis = ApproxEigenbasis.fit(jnp.asarray(lap), 48, n_iter=1)
+    gains = sp.SpectralFilterBank(
+        basis, sp.named_responses("heat,lowpass")).gains()
+    x = _signals((130, 16), seed=5)
+    want = ref.sym_filter_bank_apply(basis.fwd, basis.bwd, gains, x)
+    got = ksp.sym_filter_bank_apply(basis.fwd, basis.bwd, gains, x,
+                                    block_b=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- bank semantics: fused path == per-filter composition ------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fused_bank_equals_composition(sym_batched, backend):
+    _, basis = sym_batched
+    bank = sp.SpectralFilterBank(basis, sp.named_responses(BANK))
+    x = _signals((3, 4, N), seed=6)
+    fused = bank.apply(x, backend=backend, fused=True)
+    unfused = bank.apply(x, backend="xla", fused=False)
+    assert fused.shape == (3, len(bank), 4, N)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bank_rejects_empty_and_unknown():
+    with pytest.raises(ValueError, match="unknown filter"):
+        sp.named_responses("nosuchfilter")
+    with pytest.raises(ValueError, match="duplicate filter"):
+        sp.named_responses("heat,heat")
+    with pytest.raises(ValueError, match="duplicate filter"):
+        sp.named_responses("wavelets:2,wavelets:4")
+    lap = laplacian(community_graph(16, seed=0))
+    basis = ApproxEigenbasis.fit(jnp.asarray(lap), 32, n_iter=1)
+    with pytest.raises(ValueError, match="empty"):
+        sp.SpectralFilterBank(basis, {})
+
+
+# -- filter correctness against dense eigh ---------------------------------
+
+def test_filters_match_dense_eigh(sym_single):
+    """Per-filter output error is bounded by the accuracy the eigenbasis
+    approximation error implies (fig8's acceptance bound)."""
+    lap, basis = sym_single
+    delta = float(np.sqrt(basis.frobenius_error(lap)
+                          / (lap * lap).sum()))
+    lam, u = np.linalg.eigh(lap)
+    bank = sp.SpectralFilterBank(basis, sp.named_responses(BANK))
+    x = _signals((8, N), seed=7)
+    approx = np.asarray(bank.apply(x))
+    for f, filt in enumerate(bank.filters):
+        hd = np.asarray(filt.response(jnp.asarray(lam, jnp.float32)))
+        dense = np.asarray(x) @ (u * hd[None, :]) @ u.T
+        err = (np.linalg.norm(approx[f] - dense)
+               / max(np.linalg.norm(dense), 1e-12))
+        lip = max(sp.response_lipschitz(filt.response), 1.0)
+        assert err <= 2.0 * lip * delta + 5e-3, (filt.name, err, lip,
+                                                 delta)
+
+
+def test_identity_response_recovers_projection(sym_batched):
+    """h == identity reduces the bank to the plain spectral projection."""
+    _, basis = sym_batched
+    bank = sp.SpectralFilterBank(basis, {"id": lambda lam: lam})
+    x = _signals((3, 2, N), seed=8)
+    np.testing.assert_allclose(np.asarray(bank.apply(x)[:, 0]),
+                               np.asarray(basis.project(x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- top-k compression round trip ------------------------------------------
+
+def test_topk_keeps_exactly_k():
+    coeff = _signals((4, 6, N), seed=9)
+    kept = sp.topk_coefficients(coeff, 5)
+    assert int((np.asarray(kept) != 0).sum(-1).max()) == 5
+    assert int((np.asarray(kept) != 0).sum(-1).min()) == 5
+    with pytest.raises(ValueError):
+        sp.topk_coefficients(coeff, 0)
+    with pytest.raises(ValueError):
+        sp.topk_coefficients(coeff, N + 1)
+
+
+def test_compress_roundtrip_energy_bounds(sym_batched):
+    """Ubar is exactly orthonormal, so Parseval ties the vertex-domain
+    reconstruction error to the dropped coefficient energy."""
+    _, basis = sym_batched
+    x = _signals((3, 5, N), seed=10)
+    full = sp.compress(basis, x, N)
+    np.testing.assert_allclose(np.asarray(full.recon), np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+    c = sp.compress(basis, x, 6)
+    retained = np.asarray(c.retained_energy)
+    assert np.all(retained >= 0.0) and np.all(retained <= 1.0 + 1e-6)
+    err2 = (np.linalg.norm(np.asarray(c.recon - x), axis=-1) ** 2
+            / np.linalg.norm(np.asarray(x), axis=-1) ** 2)
+    np.testing.assert_allclose(err2, 1.0 - retained, atol=1e-4)
+    # more coefficients can only help
+    errs = [float(sp.compression_error(basis, x, k).mean())
+            for k in (4, 8, 16, N)]
+    assert all(a >= b - 1e-6 for a, b in zip(errs, errs[1:]))
+
+
+# -- Chebyshev baseline ----------------------------------------------------
+
+def test_chebyshev_matches_dense_for_smooth_response(sym_single):
+    lap, _ = sym_single
+    resp = lambda lam: jnp.exp(-0.2 * lam)  # noqa: E731 — raw (no rescale)
+    lam, u = np.linalg.eigh(lap)
+    lmax = float(lam[-1]) * 1.01
+    coeffs = sp.chebyshev_coefficients(resp, 40, lmax)
+    x = _signals((6, N), seed=11)
+    got = np.asarray(sp.chebyshev_apply(jnp.asarray(lap), coeffs, lmax, x))
+    hd = np.exp(-0.2 * lam)
+    want = np.asarray(x) @ (u * hd[None, :]) @ u.T
+    assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-4
+
+
+def test_chebyshev_batched_and_degree_edge(sym_batched):
+    laps, _ = sym_batched
+    x = _signals((3, 2, N), seed=12)
+    y = sp.chebyshev_filter(jnp.asarray(laps), sp.heat(3.0), x, degree=8)
+    assert y.shape == x.shape
+
+
+def test_chebyshev_batched_mixed_scales_stays_finite():
+    """lmax must bound EVERY graph in the batch: a graph whose spectrum
+    exceeds graph 0's would leave the Chebyshev interval and diverge."""
+    base = laplacian(community_graph(N, seed=0))
+    laps = np.stack([base, 10.0 * base])       # 10x larger spectrum
+    x = _signals((2, 3, N), seed=13)
+    y = sp.chebyshev_filter(jnp.asarray(laps), sp.heat(3.0), x, degree=30)
+    assert np.all(np.isfinite(np.asarray(y)))
+    # degree-0 expansion: a constant gain
+    lmax = sp.estimate_lmax(laps[0])
+    c0 = sp.chebyshev_coefficients(lambda lam: jnp.ones_like(lam), 0, lmax)
+    np.testing.assert_allclose(
+        np.asarray(sp.chebyshev_apply(jnp.asarray(laps[0]), c0, lmax,
+                                      x[0])),
+        np.asarray(x[0]), rtol=1e-5, atol=1e-5)
+
+
+def test_estimate_lmax_upper_bounds_spectrum(sym_single):
+    lap, _ = sym_single
+    lam = np.linalg.eigvalsh(lap)
+    assert sp.estimate_lmax(lap) >= lam[-1] * 0.999
+
+
+def test_matched_degree_scaling():
+    assert sp.matched_degree(1000, 500) == 12
+    assert sp.matched_degree(10, 10_000) == 1   # floor at degree 1
+
+
+# -- serving ---------------------------------------------------------------
+
+def test_serve_filter_mode_smoke(capsys):
+    from repro.launch import serve
+    out = serve.main(["--filter", "heat,wavelets:2", "--graphs", "2",
+                      "--graph-n", "16", "--transforms", "48",
+                      "--filter-steps", "2", "--signals", "4"])
+    assert out["responses_per_s"] > 0
+    assert out["filters"] == ["heat", "scaling", "wavelet0", "wavelet1"]
+    assert "fused bank path" in capsys.readouterr().out

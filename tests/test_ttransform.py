@@ -2,7 +2,6 @@
 Lemma 2, Algorithm 1)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core import (approximate_general, t_init, t_polish, t_objective,
                         t_to_dense, tapply, t_reconstruct, lemma2_spectrum)
