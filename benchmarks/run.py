@@ -9,9 +9,15 @@ are addressable by their short prefix (``--only fig8``) or full stem.
   PYTHONPATH=src python -m benchmarks.run --all [--fast]
   PYTHONPATH=src python -m benchmarks.run --only fig1,fig8 --fast
   PYTHONPATH=src python -m benchmarks.run --list
+
+``--json-dir DIR`` additionally writes one ``BENCH_<name>.json`` per
+benchmark (rows, elapsed seconds, pass/fail) so CI can upload the results
+as workflow artifacts and performance trajectories survive the run.
 """
 import argparse
 import importlib
+import json
+import math
 import pathlib
 import sys
 import time
@@ -59,6 +65,9 @@ def main(argv=None):
                     help="comma-separated subset (short fig aliases ok)")
     ap.add_argument("--list", action="store_true",
                     help="print discovered benchmarks and exit")
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_<name>.json result files here "
+                         "(created if missing)")
     args = ap.parse_args(argv)
     benches, aliases = discover()
     if args.list:
@@ -76,19 +85,61 @@ def main(argv=None):
                      f"{sorted(benches)} (aliases: {sorted(aliases)})")
     if not selected and not args.all:
         ap.error("pass --all to run every benchmark, or --only <names>")
+    json_dir = None
+    if args.json_dir:
+        json_dir = pathlib.Path(args.json_dir)
+        json_dir.mkdir(parents=True, exist_ok=True)
     failures = 0
     for name in sorted(benches):
         if selected and name not in selected:
             continue
         t0 = time.time()
+        record = {"benchmark": name, "fast": bool(args.fast)}
         try:
-            benches[name](fast=args.fast)
+            rows = benches[name](fast=args.fast)
+            record.update(status="pass", rows=_jsonable(rows))
             print(f"[{name} done in {time.time() - t0:.1f}s]")
-        except Exception:  # noqa: BLE001 — report all benches
+        except Exception as exc:  # noqa: BLE001 — report all benches
             failures += 1
+            # a failed gate is exactly when the measured rows matter most;
+            # benchmarks attach them to the raised error (gate_assert)
+            record.update(status="fail", error=repr(exc),
+                          rows=_jsonable(getattr(exc, "bench_rows", None)))
             print(f"[{name} FAILED]")
             traceback.print_exc()
+        record["elapsed_s"] = round(time.time() - t0, 3)
+        if json_dir is not None:
+            (json_dir / f"BENCH_{name}.json").write_text(
+                json.dumps(record, indent=1))
     return 1 if failures else 0
+
+
+def gate_assert(cond, msg, rows=None):
+    """Benchmark gate: like assert, but a failure carries the measured
+    rows so the BENCH_*.json artifact records them (see main())."""
+    if not cond:
+        err = AssertionError(msg)
+        err.bench_rows = rows
+        raise err
+
+
+def _jsonable(obj):
+    """Coerce benchmark return values (numpy scalars/arrays, tuples) into
+    strict JSON: non-finite floats become None (json.dumps would emit the
+    non-standard NaN/Infinity tokens), non-coercible values their repr."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item") and getattr(obj, "ndim", None) == 0:
+        return _jsonable(obj.item())   # numpy scalar: re-check finiteness
+    if hasattr(obj, "tolist"):
+        return _jsonable(obj.tolist())
+    return repr(obj)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,81 @@
+"""Anytime FGFT: one fit, many quality tiers, and warm-start growth
+(DESIGN.md §9).
+
+The number of fundamental components g is the paper's accuracy/latency
+dial.  This example shows the three ways the anytime subsystem exposes it
+AFTER fitting:
+
+  1. prefix-cut transforms — the staged tables cut exactly at a ladder of
+     stage boundaries, so a "draft" transform costs proportionally fewer
+     stages than "full" without refitting anything;
+  2. tiered serving — ``FGFTServeEngine`` compiles one jitted program per
+     named tier and lets every request pick its own quality;
+  3. warm-start extension — ``ApproxEigenbasis.extend`` grows a fit with
+     new Theorem-1 components against the current residual, reusing (and
+     optionally re-sweeping) the already-fitted prefix.
+
+  PYTHONPATH=src python examples/anytime_tiers.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ApproxEigenbasis, build_fgft, laplacian
+from repro.core.fgft import prefix_relative_error
+from repro.graphs import community_graph
+from repro.launch.serve import FGFTServeEngine
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 64
+    g = 2 * n * int(np.log2(n))
+    lap = jnp.asarray(laplacian(community_graph(n, seed=0)))
+
+    # --- 1. the accuracy-vs-FLOPs frontier of ONE fit --------------------
+    f = build_fgft(lap, g, directed=False, n_iter=2)
+    print(f"[anytime] one fit, {len(f.stage_cuts) - 1} usable prefixes:")
+    for s, k in f.stage_cuts:
+        if k == 0:
+            continue
+        err = prefix_relative_error(lap, f, int(k))
+        print(f"  g'={int(k):4d}  stages={int(s):3d}  "
+              f"flops/matvec={f.flops_per_matvec(int(k)):6d}  "
+              f"rel error={err:.5f}")
+    x = jnp.asarray(rng.standard_normal((8, n)).astype(np.float32))
+    s_half, k_half = np.asarray(f.stage_cuts)[len(f.stage_cuts) // 2]
+    draft = f.filter(x, lambda lam: 1.0 / (1.0 + lam),
+                     num_stages=int(s_half))
+    full = f.filter(x, lambda lam: 1.0 / (1.0 + lam))
+    drift = float(jnp.linalg.norm(draft - full) / jnp.linalg.norm(full))
+    print(f"[anytime] half-prefix filter (g'={int(k_half)}) vs full: "
+          f"relative output drift {drift:.4f}")
+
+    # --- 2. tiered serving over a fleet of graphs ------------------------
+    laps = np.stack([laplacian(community_graph(n, seed=s))
+                     for s in range(4)])
+    engine = FGFTServeEngine(
+        jnp.asarray(laps), g, n_iter=2,
+        tiers={"full": 1.0, "balanced": 0.5, "draft": 0.25})
+    sig = jnp.asarray(rng.standard_normal((4, 16, n)).astype(np.float32))
+    for tier, meta in engine.tiers.items():
+        y = engine.step(sig, h=lambda lam: 1.0 / (1.0 + lam), tier=tier)
+        print(f"[serve]   tier {tier!r}: g'={meta['num_transforms']}/{g} "
+              f"({meta['num_stages']} stages) -> {y.shape}")
+    print(f"[serve]   per-tier step counts: {engine.stats['steps']}")
+
+    # --- 3. warm-start growth against the residual -----------------------
+    mats = jnp.asarray(laps)
+    half = ApproxEigenbasis.fit(mats, g // 2, n_iter=1)
+    grown = half.extend(mats, g, n_iter=1)
+    scratch = ApproxEigenbasis.fit(mats, g, n_iter=1)
+    denom = np.asarray(jnp.sum(mats * mats, axis=(1, 2)))
+    print(f"[extend]  rel error g={g // 2}: "
+          f"{np.round(np.asarray(half.objective) / denom, 4)}")
+    print(f"[extend]  rel error extend->{g}: "
+          f"{np.round(np.asarray(grown.objective) / denom, 4)}")
+    print(f"[extend]  rel error scratch {g}: "
+          f"{np.round(np.asarray(scratch.objective) / denom, 4)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ migrate from the two legacy APIs without behavior change.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, Optional, Union
 
@@ -34,8 +35,9 @@ import numpy as np
 
 from . import gtransform as gt
 from . import ttransform as tt
-from .staging import (StagedG, StagedT, pack_g, pack_g_adjoint, pack_g_batch,
-                      pack_t, pack_t_batch, pack_t_inverse)
+from .staging import (StagedG, StagedT, default_cut_ladder,
+                      pack_g_batch_pair, pack_g_pair, pack_t_batch_pair,
+                      pack_t_pair, select_cut)
 from .types import GFactors, TFactors
 
 SYMMETRIC = "sym"
@@ -64,6 +66,30 @@ def _gen_fit_program(m: int, n_iter: int, update_spectrum: bool,
         return tt._approx_gen_core(
             c_mat, cbar0, m, n_iter, update_spectrum,
             jnp.asarray(eps, c_mat.dtype))
+
+    return jax.jit(jax.vmap(one) if batched else one)
+
+
+@functools.lru_cache(maxsize=None)
+def _sym_extend_program(g_extra: int, n_iter: int, update_spectrum: bool,
+                        eps: float, score: str, batched: bool):
+    """Warm-start extension program, cached like the fit programs: one
+    compile per (g_extra, hyperparam) combo serves every batch."""
+    def one(s_mat, fi, fj, fc, fs, fsg, sbar):
+        return gt._extend_sym_core(
+            s_mat, GFactors(fi, fj, fc, fs, fsg), sbar, g_extra, n_iter,
+            update_spectrum, jnp.asarray(eps, s_mat.dtype), score)
+
+    return jax.jit(jax.vmap(one) if batched else one)
+
+
+@functools.lru_cache(maxsize=None)
+def _gen_extend_program(m_extra: int, n_iter: int, update_spectrum: bool,
+                        eps: float, batched: bool):
+    def one(c_mat, fk, fi, fj, fa, cbar):
+        return tt._extend_gen_core(
+            c_mat, TFactors(fk, fi, fj, fa), cbar, m_extra, n_iter,
+            update_spectrum, jnp.asarray(eps, c_mat.dtype))
 
     return jax.jit(jax.vmap(one) if batched else one)
 
@@ -105,7 +131,8 @@ class ApproxEigenbasis:
 
     @classmethod
     def fit(cls, mats: jnp.ndarray, num_transforms: int, *,
-            kind: str = "auto", n_iter: int = 8, eps: float = 1e-3,
+            kind: str = "auto", hint: Optional[str] = None,
+            n_iter: int = 8, eps: float = 1e-3,
             update_spectrum: bool = True,
             spectrum: Optional[jnp.ndarray] = None,
             score: Optional[str] = None,
@@ -120,8 +147,13 @@ class ApproxEigenbasis:
         across devices (DESIGN.md §7).
 
         ``kind="auto"`` picks "sym" when the input is (numerically)
-        symmetric.  ``score``/``spectrum`` have the same meaning as in
-        ``approximate_symmetric`` (ignored score for the general case).
+        symmetric; pass ``kind="sym"``/``"general"`` to force a family, or
+        ``hint`` to keep auto-detection but get a warning when it resolves
+        against the caller's expectation (e.g. a directed graph whose
+        Laplacian happens to be numerically symmetric would silently route
+        through the G path).  ``score``/``spectrum`` have the same meaning
+        as in ``approximate_symmetric`` (ignored score for the general
+        case).
         """
         mats = jnp.asarray(mats, jnp.float32)
         if mats.ndim not in (2, 3):
@@ -130,8 +162,16 @@ class ApproxEigenbasis:
         n = mats.shape[-1]
         if mats.shape[-2] != n:
             raise ValueError(f"matrices must be square, got {mats.shape}")
+        if hint not in (None, SYMMETRIC, GENERAL):
+            raise ValueError(f"unknown hint {hint!r}; expected "
+                             f"{SYMMETRIC!r} or {GENERAL!r}")
         if kind == "auto":
             kind = SYMMETRIC if _is_symmetric(mats) else GENERAL
+            if hint is not None and hint != kind:
+                warnings.warn(
+                    f"kind='auto' resolved to {kind!r}, overriding the "
+                    f"caller hint {hint!r}; pass kind={hint!r} to force "
+                    "that factorization family", stacklevel=2)
         if mesh is not None and batched:
             # unbatched (n, n) input has no batch axis to spread — only a
             # (B, n, n) stack shards; awkward B falls back to replication
@@ -149,13 +189,13 @@ class ApproxEigenbasis:
                                       update_spectrum, float(eps), score,
                                       batched)
             factors, sbar, obj, hist, iters = fit_fn(mats, sbar0)
-            fwd = (pack_g_batch(factors, n) if batched else pack_g(factors))
-            bwd = (pack_g_batch(factors, n, adjoint=True) if batched
-                   else pack_g_adjoint(factors))
+            fwd, bwd = (pack_g_batch_pair(factors, n) if batched
+                        else pack_g_pair(factors))
             return cls(kind=SYMMETRIC, n=n, batched=batched,
                        factors=factors, spectrum=sbar, fwd=fwd, bwd=bwd,
                        objective=obj,
-                       info={"history": hist, "iterations": iters})
+                       info={"history": hist, "iterations": iters,
+                             "score": score})
 
         if kind == GENERAL:
             cbar0 = (jnp.asarray(spectrum, jnp.float32)
@@ -163,16 +203,101 @@ class ApproxEigenbasis:
             fit_fn = _gen_fit_program(num_transforms, n_iter,
                                       update_spectrum, float(eps), batched)
             factors, cbar, obj, hist, iters = fit_fn(mats, cbar0)
-            fwd = (pack_t_batch(factors, n) if batched
-                   else pack_t(factors, n))
-            bwd = (pack_t_batch(factors, n, inverse=True) if batched
-                   else pack_t_inverse(factors, n))
+            fwd, bwd = (pack_t_batch_pair(factors, n) if batched
+                        else pack_t_pair(factors, n))
             return cls(kind=GENERAL, n=n, batched=batched,
                        factors=factors, spectrum=cbar, fwd=fwd, bwd=bwd,
                        objective=obj,
                        info={"history": hist, "iterations": iters})
 
         raise ValueError(f"unknown kind {kind!r}")
+
+    # -- warm-start extension (DESIGN.md §9) -------------------------------
+
+    @property
+    def num_transforms(self) -> int:
+        """Number of fitted fundamental components g (per matrix)."""
+        return int(np.asarray(self.factors[0]).shape[-1])
+
+    @property
+    def stage_cuts(self) -> np.ndarray:
+        """(C, 2) array of exact (num_stages, num_components) anytime
+        boundaries of the staged tables (core/staging.py)."""
+        return self.fwd.cuts
+
+    def select_tier(self, fraction: Optional[float] = None,
+                    num_transforms: Optional[int] = None) -> tuple:
+        """Pick the exact stage cut nearest a component target; returns
+        ``(num_stages, num_components)`` for ``apply``/``project``."""
+        return select_cut(self.fwd, num_transforms=num_transforms,
+                          fraction=fraction)
+
+    def extend(self, mats: jnp.ndarray, num_transforms: int, *,
+               n_iter: int = 0, eps: float = 1e-3,
+               update_spectrum: bool = True, score: Optional[str] = None,
+               mesh: Optional[Any] = None) -> "ApproxEigenbasis":
+        """Grow this fit to ``num_transforms`` total components WITHOUT
+        refitting the prefix: Theorem-1/3-initialized components are
+        greedily appended against the current residual (the greedy
+        continues exactly where a from-scratch init would stand after the
+        first g components), so the extended basis's anytime prefix of the
+        ORIGINAL g components is the original basis.  ``n_iter`` > 0
+        additionally re-sweeps the whole chain (fitted prefix included)
+        with the usual polish/Lemma refinement.
+
+        ``mats``: the same (n, n) / (B, n, n) stack this basis was fitted
+        to (the basis stores factors, not matrices).  Batched fits extend
+        under one jit(vmap) program, cached like the fit programs.  The
+        extended tables' cut ladder includes the ORIGINAL g, so the
+        pre-extension basis remains selectable as a serving tier.
+        ``score`` defaults to the score the fit resolved (recorded in
+        ``info``; "gamma" for a restored basis, which drops ``info``)."""
+        mats = jnp.asarray(mats, jnp.float32)
+        if mats.ndim != (3 if self.batched else 2):
+            raise ValueError(f"expected {'batched ' if self.batched else ''}"
+                             f"matrices matching the fit, got {mats.shape}")
+        if mats.shape[-1] != self.n or mats.shape[-2] != self.n:
+            raise ValueError(f"matrix side {mats.shape[-1]} != fitted "
+                             f"n={self.n}")
+        g_old = self.num_transforms
+        extra = num_transforms - g_old
+        if extra <= 0:
+            raise ValueError(f"num_transforms must exceed the fitted "
+                             f"{g_old}, got {num_transforms}")
+        n = self.n
+        if mesh is not None and self.batched:
+            from repro.runtime.sharding import matrix_batch_sharding
+            mats = jax.device_put(
+                mats, matrix_batch_sharding(mesh, mats.ndim,
+                                            batch=mats.shape[0]))
+        # keep the pre-extension basis selectable as a tier: the new
+        # ladder carries the original g as an extra exact cut
+        cuts = sorted(set(default_cut_ladder(num_transforms).tolist())
+                      | {g_old})
+        info = {"extended_from": g_old}
+        if self.kind == SYMMETRIC:
+            if score is None:
+                score = self.info.get("score", "gamma")
+            info["score"] = score  # chained extends keep the criterion
+            fit_fn = _sym_extend_program(extra, n_iter, update_spectrum,
+                                         float(eps), score, self.batched)
+            factors, sbar, obj, hist, iters = fit_fn(
+                mats, *self.factors, self.spectrum)
+            fwd, bwd = (pack_g_batch_pair(factors, n, cuts=cuts)
+                        if self.batched
+                        else pack_g_pair(factors, cuts=cuts))
+        else:
+            fit_fn = _gen_extend_program(extra, n_iter, update_spectrum,
+                                         float(eps), self.batched)
+            factors, sbar, obj, hist, iters = fit_fn(
+                mats, *self.factors, self.spectrum)
+            fwd, bwd = (pack_t_batch_pair(factors, n, cuts=cuts)
+                        if self.batched
+                        else pack_t_pair(factors, n, cuts=cuts))
+        info.update(history=hist, iterations=iters)
+        return type(self)(kind=self.kind, n=n, batched=self.batched,
+                          factors=factors, spectrum=sbar, fwd=fwd, bwd=bwd,
+                          objective=obj, info=info)
 
     # -- application -------------------------------------------------------
 
@@ -181,23 +306,30 @@ class ApproxEigenbasis:
         return kops
 
     def apply(self, x: jnp.ndarray, inverse: bool = False,
-              backend: str = "xla") -> jnp.ndarray:
+              backend: str = "xla",
+              num_stages: Optional[int] = None) -> jnp.ndarray:
         """y = Ubar x (or Tbar x); ``inverse=True`` applies Ubar^T /
         Tbar^{-1} (graph Fourier ANALYSIS; forward is SYNTHESIS).
 
         ``x``: (..., n), with a leading (B, ...) batch when ``batched``.
+        ``num_stages`` runs the anytime prefix (pick a boundary with
+        ``select_tier``; DESIGN.md §9).
         """
         kops = self._ops()
         staged = self.bwd if inverse else self.fwd
         if self.kind == SYMMETRIC:
             fn = kops.batched_g_apply if self.batched else kops.g_apply
+            keep = "head" if inverse else "tail"
         else:
             fn = kops.batched_t_apply if self.batched else kops.t_apply
-        return fn(staged, x, backend=backend)
+            keep = "tail" if inverse else "head"
+        return fn(staged, x, backend=backend, num_stages=num_stages,
+                  keep=keep)
 
     def project(self, x: jnp.ndarray,
                 h: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
-                backend: str = "xla") -> jnp.ndarray:
+                backend: str = "xla",
+                num_stages: Optional[int] = None) -> jnp.ndarray:
         """Apply the reconstructed operator (a spectral projection/filter):
 
             y = Ubar diag(h(spectrum)) Ubar^T x      (symmetric)
@@ -206,7 +338,8 @@ class ApproxEigenbasis:
         ``h`` defaults to the identity (the approximated matrix itself).
         ``backend="pallas"`` runs the fused one-round-trip kernel; batched
         instances use the (B, S, P)-table batched kernels (DESIGN.md §4,
-        §7)."""
+        §7).  ``num_stages`` truncates both transform legs to the same
+        anytime component prefix (DESIGN.md §9)."""
         kops = self._ops()
         d = self.spectrum if h is None else h(self.spectrum)
         if self.kind == SYMMETRIC:
@@ -215,17 +348,21 @@ class ApproxEigenbasis:
         else:
             fn = (kops.batched_gen_operator if self.batched
                   else kops.gen_operator)
-        return fn(self.fwd, self.bwd, d, x, backend=backend)
+        return fn(self.fwd, self.bwd, d, x, backend=backend,
+                  num_stages=num_stages)
 
-    def to_dense(self) -> jnp.ndarray:
-        """Materialize the basis: Ubar / Tbar as (n, n) or (B, n, n)."""
+    def to_dense(self, num_stages: Optional[int] = None) -> jnp.ndarray:
+        """Materialize the basis: Ubar / Tbar as (n, n) or (B, n, n)
+        (``num_stages``: the anytime prefix basis instead of the full
+        one)."""
         eye = jnp.eye(self.n, dtype=jnp.float32)
         if self.batched:
             b = self.spectrum.shape[0]
             eye = jnp.broadcast_to(eye, (b, self.n, self.n))
         # staged apply acts on row vectors: row r of the result is
         # (basis e_r), i.e. the transpose of the basis matrix
-        return jnp.swapaxes(self.apply(eye), -1, -2)
+        return jnp.swapaxes(self.apply(eye, num_stages=num_stages),
+                            -1, -2)
 
     def reconstruct(self) -> jnp.ndarray:
         """Dense approximation  Ubar diag(s) Ubar^T  /  Tbar diag(c)
@@ -252,8 +389,10 @@ class ApproxEigenbasis:
         batch = int(self.spectrum.shape[0])
 
         def put(leaf):
-            if isinstance(leaf, (int, np.integer)):
+            if isinstance(leaf, (int, np.integer)) or leaf is None:
                 return leaf
+            if isinstance(leaf, np.ndarray):
+                return leaf  # host metadata (the cuts ladder) stays host
             return jax.device_put(
                 leaf, matrix_batch_sharding(mesh, jnp.ndim(leaf),
                                             batch=batch))
@@ -275,6 +414,13 @@ class ApproxEigenbasis:
                     np.asarray(self.factors[0]).shape[-1]),
                 "batch": (int(self.spectrum.shape[0]) if self.batched
                           else 0),
+                # anytime prefix metadata (DESIGN.md §9): load() repacks
+                # the staged tables deterministically, so recording the
+                # ladder here both documents the serving tiers a restored
+                # basis offers and lets load() verify the repack
+                "num_stages": int(self.fwd.num_stages),
+                "stage_cuts": (np.asarray(self.fwd.cuts).tolist()
+                               if self.fwd.cuts is not None else None),
             }
         }
         return save_checkpoint(directory, step, state, metadata=meta)
@@ -314,13 +460,18 @@ class ApproxEigenbasis:
         state, _, _ = restore_checkpoint(directory, like, step=step)
         factors, spectrum = state["factors"], state["spectrum"]
         if kind == SYMMETRIC:
-            fwd = pack_g_batch(factors, n) if batched else pack_g(factors)
-            bwd = (pack_g_batch(factors, n, adjoint=True) if batched
-                   else pack_g_adjoint(factors))
+            fwd, bwd = (pack_g_batch_pair(factors, n) if batched
+                        else pack_g_pair(factors))
         else:
-            fwd = (pack_t_batch(factors, n) if batched
-                   else pack_t(factors, n))
-            bwd = (pack_t_batch(factors, n, inverse=True) if batched
-                   else pack_t_inverse(factors, n))
+            fwd, bwd = (pack_t_batch_pair(factors, n) if batched
+                        else pack_t_pair(factors, n))
+        saved_cuts = meta.get("stage_cuts")
+        if (saved_cuts is not None and fwd.cuts is not None
+                and np.asarray(fwd.cuts).tolist() != saved_cuts):
+            warnings.warn(
+                "restored staged tables repacked with a different anytime "
+                "cut ladder than the checkpoint recorded (packing defaults "
+                "changed?); serving tiers pinned to the old ladder's stage "
+                "counts must be re-selected via select_tier", stacklevel=2)
         return cls(kind=kind, n=n, batched=batched, factors=factors,
                    spectrum=spectrum, fwd=fwd, bwd=bwd)

@@ -19,8 +19,7 @@ import numpy as np
 
 from . import gtransform as gt
 from . import ttransform as tt
-from .staging import (StagedG, StagedT, pack_g, pack_g_adjoint, pack_t,
-                      pack_t_inverse)
+from .staging import StagedG, StagedT, pack_g_pair, pack_t_pair
 from .types import GFactors, TFactors
 from repro.kernels import ops as kops
 
@@ -59,42 +58,79 @@ class FGFT:
     objective: float = float("nan")
 
     # -- ops ---------------------------------------------------------------
-    def analysis(self, x: jnp.ndarray, backend: str = "xla") -> jnp.ndarray:
+    def analysis(self, x: jnp.ndarray, backend: str = "xla",
+                 num_stages: Optional[int] = None) -> jnp.ndarray:
         """Graph Fourier coefficients  x_hat = Ubar^T x  (or Tbar^{-1} x).
 
         x: (..., n) -> (..., n), same dtype.  Cost 6g (G) or m1+2m2 (T)
-        flops per vector — paper Table 1 (vs 2n^2 dense)."""
+        flops per vector — paper Table 1 (vs 2n^2 dense).  ``num_stages``
+        runs the anytime prefix transform: only the stages covering the
+        leading components (pick a boundary via ``self.stage_cuts``;
+        DESIGN.md §9)."""
         if self.directed:
-            return kops.t_apply(self.bwd, x, backend=backend)
-        return kops.g_apply(self.bwd, x, backend=backend)
+            return kops.t_apply(self.bwd, x, backend=backend,
+                                num_stages=num_stages, keep="tail")
+        return kops.g_apply(self.bwd, x, backend=backend,
+                            num_stages=num_stages, keep="head")
 
-    def synthesis(self, xh: jnp.ndarray, backend: str = "xla") -> jnp.ndarray:
+    def synthesis(self, xh: jnp.ndarray, backend: str = "xla",
+                  num_stages: Optional[int] = None) -> jnp.ndarray:
         """Inverse transform  x = Ubar x_hat  (or Tbar x_hat): (..., n) ->
         (..., n).  Exact inverse of ``analysis`` for the G case
         (orthonormal); for T it inverts up to f32 conditioning of Tbar."""
         if self.directed:
-            return kops.t_apply(self.fwd, xh, backend=backend)
-        return kops.g_apply(self.fwd, xh, backend=backend)
+            return kops.t_apply(self.fwd, xh, backend=backend,
+                                num_stages=num_stages, keep="head")
+        return kops.g_apply(self.fwd, xh, backend=backend,
+                            num_stages=num_stages, keep="tail")
 
     def filter(self, x: jnp.ndarray, h: Callable[[jnp.ndarray], jnp.ndarray],
-               backend: str = "xla") -> jnp.ndarray:
+               backend: str = "xla",
+               num_stages: Optional[int] = None) -> jnp.ndarray:
         """Spectral filter  y = Ubar diag(h(spectrum)) Ubar^T x  (or the
         Tbar form) — eq. (2)/(7) as an operator.  ``h`` maps (n,) graph
         frequencies to (n,) gains; x: (..., n).  ``backend="pallas"`` runs
-        the fused one-round-trip kernel (DESIGN.md §4)."""
+        the fused one-round-trip kernel (DESIGN.md §4); ``num_stages``
+        truncates both transform legs to the same component prefix."""
         d = h(self.spectrum)
         if self.directed:
             return kops.gen_operator(self.fwd, self.bwd, d, x,
-                                     backend=backend)
-        return kops.sym_operator(self.fwd, self.bwd, d, x, backend=backend)
+                                     backend=backend, num_stages=num_stages)
+        return kops.sym_operator(self.fwd, self.bwd, d, x, backend=backend,
+                                 num_stages=num_stages)
 
-    def flops_per_matvec(self) -> int:
-        """Paper's FLOP accounting: 6 per G-transform; 1 per scaling and 2
-        per shear for T-transforms (plus n for the diagonal)."""
+    @property
+    def stage_cuts(self) -> np.ndarray:
+        """(C, 2) array of exact (num_stages, num_components) prefix
+        boundaries of the staged tables (core/staging.py)."""
+        return self.fwd.cuts
+
+    def prefix_transforms(self, num_transforms: int):
+        """The leading ``num_transforms`` fundamental components as a
+        factor container (the paper's greedy/significance order: for the
+        G family that is the application-order TAIL of ``g_factors``, for
+        the T family the application-order HEAD of ``t_factors``)."""
+        if self.directed:
+            return TFactors(*(f[:num_transforms] for f in self.t_factors))
+        g = self.g_factors.g
+        return GFactors(*(f[g - num_transforms:] for f in self.g_factors))
+
+    def flops_per_matvec(self, num_transforms: Optional[int] = None) -> int:
+        """Paper Table-1 cost of one matvec with the reconstructed
+        operator  Lbar = Ubar diag(sbar) Ubar^T  (or Tbar diag(cbar)
+        Tbar^{-1}): each leg costs 6 per G-transform / 1 per scaling and
+        2 per shear, both legs are applied, and the diagonal costs n —
+        i.e. 12 g + n (G) or 2 (m1 + 2 m2) + n (T).  ``num_transforms``
+        prices an anytime prefix instead of the full chain."""
         if self.directed:
             kinds = np.asarray(self.t_factors.kind)
-            return int((kinds == 0).sum() + 2 * (kinds == 1).sum())
-        return 6 * self.g_factors.g
+            if num_transforms is not None:
+                kinds = kinds[:num_transforms]
+            return int(2 * ((kinds == 0).sum() + 2 * (kinds == 1).sum())
+                       + self.n)
+        g = (self.g_factors.g if num_transforms is None
+             else num_transforms)
+        return 12 * g + self.n
 
 
 def build_fgft(lap: jnp.ndarray, num_transforms: int, directed: bool,
@@ -113,24 +149,54 @@ def build_fgft(lap: jnp.ndarray, num_transforms: int, directed: bool,
         factors, cbar, info = tt.approximate_general(
             lap, m=num_transforms, n_iter=n_iter, eps=eps,
             update_spectrum=update_spectrum)
+        fwd, bwd = pack_t_pair(factors, n)
         return FGFT(n=n, directed=True, spectrum=cbar, t_factors=factors,
-                    fwd=pack_t(factors, n), bwd=pack_t_inverse(factors, n),
-                    objective=float(info["objective"]))
+                    fwd=fwd, bwd=bwd, objective=float(info["objective"]))
     factors, sbar, info = gt.approximate_symmetric(
         lap, g=num_transforms, n_iter=n_iter, eps=eps,
         update_spectrum=update_spectrum)
+    fwd, bwd = pack_g_pair(factors)
     return FGFT(n=n, directed=False, spectrum=sbar, g_factors=factors,
-                fwd=pack_g(factors), bwd=pack_g_adjoint(factors),
-                objective=float(info["objective"]))
+                fwd=fwd, bwd=bwd, objective=float(info["objective"]))
+
+
+def _relative(obj: float, denom: float) -> float:
+    """obj / denom guarded for the all-zero-Laplacian corner: an empty
+    graph (e.g. ``erdos_renyi(n, p=0.0)``) has ||L||_F = 0, and the exact
+    approximation of the zero operator has error 0, not NaN."""
+    if denom > 0.0:
+        return obj / denom
+    return 0.0 if obj <= 1e-12 else float("inf")
 
 
 def relative_error(lap: jnp.ndarray, f: FGFT) -> float:
     """||L - Lbar||_F^2 / ||L||_F^2 — the paper's accuracy metric (its
-    Figs. 1-5).  ``lap``: the (n, n) Laplacian ``f`` was fitted to."""
+    Figs. 1-5).  ``lap``: the (n, n) Laplacian ``f`` was fitted to.
+    Returns 0.0 (not NaN) for an exactly-represented all-zero Laplacian."""
     lap = jnp.asarray(lap, jnp.float32)
     denom = float(jnp.sum(lap * lap))
     if f.directed:
         obj = float(tt.t_objective(lap, f.t_factors, f.spectrum))
     else:
         obj = float(gt.g_objective(lap, f.g_factors, f.spectrum))
-    return obj / denom
+    return _relative(obj, denom)
+
+
+def prefix_relative_error(lap: jnp.ndarray, f: FGFT,
+                          num_transforms: int) -> float:
+    """Relative error of the ANYTIME prefix operator with the leading
+    ``num_transforms`` components (DESIGN.md §9), with the spectrum refit
+    for the prefix (Lemma 1 closed form; Lemma 2 refit guarded against
+    f32 regression).  Evaluates the accuracy-vs-FLOPs frontier the tiered
+    server trades along (benchmarks/fig9_anytime.py)."""
+    lap = jnp.asarray(lap, jnp.float32)
+    denom = float(jnp.sum(lap * lap))
+    pre = f.prefix_transforms(num_transforms)
+    if f.directed:
+        cbar = tt.lemma2_spectrum(lap, pre)
+        obj = float(jnp.minimum(tt.t_objective(lap, pre, cbar),
+                                tt.t_objective(lap, pre, f.spectrum)))
+    else:
+        sbar = gt.lemma1_spectrum(lap, pre)
+        obj = float(gt.g_objective(lap, pre, sbar))
+    return _relative(obj, denom)

@@ -401,16 +401,10 @@ def g_objective(s_mat: jnp.ndarray, factors: GFactors, sbar: jnp.ndarray
     return jnp.sum(d * d)
 
 
-def _approx_sym_core(s_mat, sbar0, g, n_iter, update_spectrum, eps, score):
-    """Traceable Algorithm-1 body (init + polish/spectrum sweeps).
-
-    Kept jit-free so callers can compose it: ``approximate_symmetric`` jits
-    it directly; the batched engine (core/eigenbasis.py) wraps it in
-    ``jit(vmap(...))`` to run Algorithm 1 for a whole stack of matrices in
-    one program (DESIGN.md §7).
-    """
-    factors, w = g_init(s_mat, sbar0, g, score)
-    sbar = jnp.where(update_spectrum, jnp.diagonal(w), sbar0)
+def _sym_iterate(s_mat, factors, sbar, n_iter, update_spectrum, eps):
+    """Algorithm-1 refinement loop: polish + Lemma-1 sweeps until the
+    objective change drops below ``eps`` (shared by the from-scratch fit
+    and the warm-start extension)."""
     obj0 = g_objective(s_mat, factors, sbar)
 
     def iter_body(carry):
@@ -430,6 +424,39 @@ def _approx_sym_core(s_mat, sbar0, g, n_iter, update_spectrum, eps, score):
     state = (0, factors, sbar, obj0 + 2 * eps + 1.0, obj0, hist0)
     it, factors, sbar, _, obj, hist = lax.while_loop(cond, iter_body, state)
     return factors, sbar, obj, hist, it
+
+
+def _approx_sym_core(s_mat, sbar0, g, n_iter, update_spectrum, eps, score):
+    """Traceable Algorithm-1 body (init + polish/spectrum sweeps).
+
+    Kept jit-free so callers can compose it: ``approximate_symmetric`` jits
+    it directly; the batched engine (core/eigenbasis.py) wraps it in
+    ``jit(vmap(...))`` to run Algorithm 1 for a whole stack of matrices in
+    one program (DESIGN.md §7).
+    """
+    factors, w = g_init(s_mat, sbar0, g, score)
+    sbar = jnp.where(update_spectrum, jnp.diagonal(w), sbar0)
+    return _sym_iterate(s_mat, factors, sbar, n_iter, update_spectrum, eps)
+
+
+def _extend_sym_core(s_mat, factors0, sbar0, g_extra, n_iter,
+                     update_spectrum, eps, score):
+    """Warm-start extension: append ``g_extra`` Theorem-1 components
+    fitted against the current residual (DESIGN.md §9).
+
+    The greedy continues on W = Ubar^T S Ubar — exactly where a
+    from-scratch fit's init would stand after the first g components — so
+    the g new factors extend the DISCOVERY order.  In application order
+    (core/types.py) the new factors are therefore PREPENDED: Ubar_ext =
+    Ubar0 · Unew.  ``n_iter`` > 0 re-sweeps the whole extended chain
+    (fitted prefix included) with the usual polish/Lemma-1 loop.
+    """
+    w = g_conjugated(s_mat, factors0)
+    new, w2 = g_init(w, sbar0, g_extra, score)
+    factors = GFactors(*(jnp.concatenate([nf, of])
+                         for nf, of in zip(new, factors0)))
+    sbar = jnp.where(update_spectrum, jnp.diagonal(w2), sbar0)
+    return _sym_iterate(s_mat, factors, sbar, n_iter, update_spectrum, eps)
 
 
 _approx_sym_jit = functools.partial(jax.jit, static_argnames=(

@@ -13,22 +13,49 @@ packing empirically produces ~2 alpha log2 n stages of ~n/2 pairs (see
 tests/test_staging.py), turning an O(g)-deep dependency chain into an
 O(log n)-deep one.
 
+Anytime prefixes (DESIGN.md §9).  The number of fundamental components is
+the paper's accuracy/latency dial, so the staged tables must be cuttable:
+packing is *chunked* along the greedy **discovery order** (the order the
+solver found the components — the paper's significance order).  Within a
+chunk, scheduling is plain ASAP (full depth efficiency); chunk boundaries
+are barriers, so every chunk boundary is a stage boundary at which cutting
+the (S, P) tables yields EXACTLY the operator of the leading k components.
+The valid (num_stages, num_components) pairs are recorded in the ``cuts``
+metadata carried by ``StagedG``/``StagedT``.  Adjoint/inverse tables are
+built as stage-mirrors of the forward tables (same stages, reversed order,
+per-entry adjoint/inverse values), so one ``num_stages`` selects consistent
+cuts of both directions:
+
+  * G-family: discovery order is the REVERSE of application order
+    (core/types.py), so the significant stages sit at the TAIL of the
+    forward (synthesis) tables and at the HEAD of the adjoint (analysis)
+    tables.
+  * T-family: discovery order == application order, so the significant
+    stages sit at the HEAD of the forward tables and the TAIL of the
+    inverse tables.
+
 Packing happens on the host (numpy, once per factorization); the staged
 arrays are then consumed by jit code (kernels/ or the XLA reference path).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
 from .types import GFactors, SCALE, TFactors
 
+DEFAULT_NUM_CHUNKS = 4
+
 
 class StagedG(NamedTuple):
     """G-transforms packed into conflict-free stages (padded to width P).
 
+    ``idx_*``/``c``/``s``/``sigma`` are (S, P) tables — (B, S, P) when
+    batched.  ``cuts`` is host metadata: an (C, 2) int array of
+    (num_stages, num_components) pairs at which truncating the stage axis
+    is exact (see module docstring for the head/tail orientation).
     Padding entries use an index unused by the stage with (c=1, s=0,
     sigma=1): an exact no-op under y_i = c x_i + s x_j;
     y_j = sigma (-s x_i + c x_j).
@@ -39,78 +66,215 @@ class StagedG(NamedTuple):
     c: jnp.ndarray       # (S, P)
     s: jnp.ndarray       # (S, P)
     sigma: jnp.ndarray   # (S, P)
+    cuts: Optional[np.ndarray]  # (C, 2) int64 host: (num_stages, num_comp)
     n: int
 
     @property
     def num_stages(self) -> int:
-        return self.idx_i.shape[0]
+        return self.idx_i.shape[-2]
 
 
 class StagedT(NamedTuple):
     """T-transforms packed into stages.  Unified per-pair action
     y_i = alpha x_i + beta x_j with (alpha, beta) = (1, a) for shears and
-    (a, 0) for scalings.  Padding: (alpha=1, beta=0) at an unused index."""
+    (a, 0) for scalings.  Padding: (alpha=1, beta=0) at an unused index.
+    ``cuts`` carries the exact (num_stages, num_components) prefix ladder
+    (see module docstring)."""
 
     idx_i: jnp.ndarray   # (S, P) int32 (written coordinate)
     idx_j: jnp.ndarray   # (S, P) int32 (read coordinate)
     alpha: jnp.ndarray   # (S, P)
     beta: jnp.ndarray    # (S, P)
+    cuts: Optional[np.ndarray]  # (C, 2) int64 host
     n: int
 
     @property
     def num_stages(self) -> int:
-        return self.idx_i.shape[0]
+        return self.idx_i.shape[-2]
 
 
-def _greedy_schedule(touch_sets) -> Tuple[np.ndarray, int]:
-    """ASAP list scheduling.  touch_sets: list of tuples of coordinates.
+_G_TABLE_FIELDS = ("idx_i", "idx_j", "c", "s", "sigma")
+_T_TABLE_FIELDS = ("idx_i", "idx_j", "alpha", "beta")
 
-    Returns (stage_id per factor, num_stages)."""
-    busy_until = {}
+
+def _table_fields(staged) -> Tuple[str, ...]:
+    return _G_TABLE_FIELDS if isinstance(staged, StagedG) else _T_TABLE_FIELDS
+
+
+# ---------------------------------------------------------------------------
+# Prefix metadata helpers
+# ---------------------------------------------------------------------------
+
+def default_cut_ladder(num_transforms: int,
+                       num_chunks: int = DEFAULT_NUM_CHUNKS) -> np.ndarray:
+    """Component counts at which the staged tables are exactly cuttable.
+
+    Evenly spaced (including 0 and ``num_transforms``); scheduling treats
+    each consecutive pair as a barrier-separated chunk.  More cut points
+    mean finer anytime tiers but deeper schedules (each barrier forfeits
+    a little cross-chunk packing: ~4% depth at the default 4 chunks, ~10%
+    at 8, on Theorem-1 chains — and batched tables additionally pad each
+    chunk to the batch max).  The default quarters ladder exactly covers
+    the stock full/balanced/draft serving tiers."""
+    ks = {round(num_transforms * c / num_chunks)
+          for c in range(num_chunks + 1)}
+    return np.asarray(sorted(ks | {0, num_transforms}), np.int64)
+
+
+def truncate_staged(staged, num_stages: Optional[int], keep: str = "head"):
+    """Cut staged tables at a stage boundary: keep the first (``head``) or
+    last (``tail``) ``num_stages`` stages.  Exact (equals the operator of
+    the corresponding component prefix) whenever ``num_stages`` is one of
+    ``staged.cuts``; see the module docstring for which direction each
+    family/table set uses.  Works on (S, P) and batched (B, S, P) tables
+    and on traced (jit) values."""
+    if num_stages is None:
+        return staged
+    s_tot = staged.idx_i.shape[-2]
+    if not 0 <= num_stages <= s_tot:
+        raise ValueError(f"num_stages {num_stages} not in [0, {s_tot}]")
+    if num_stages == s_tot:
+        return staged
+    if keep == "head":
+        sl = slice(0, num_stages)
+    elif keep == "tail":
+        sl = slice(s_tot - num_stages, s_tot)
+    else:
+        raise ValueError(f"keep must be 'head' or 'tail', got {keep!r}")
+    upd = {f: getattr(staged, f)[..., sl, :] for f in _table_fields(staged)}
+    if isinstance(staged.cuts, np.ndarray):
+        # host metadata only; under jit the leaf is a tracer — leave it
+        upd["cuts"] = staged.cuts[staged.cuts[:, 0] <= num_stages]
+    return staged._replace(**upd)
+
+
+def select_cut(staged, num_transforms: Optional[int] = None,
+               fraction: Optional[float] = None) -> Tuple[int, int]:
+    """Pick the exact cut nearest a component target.
+
+    Give either ``num_transforms`` (absolute component count) or
+    ``fraction`` (of the full chain).  Returns ``(num_stages,
+    num_components)`` — the ladder entry whose component count is closest
+    to the target (ties resolve to the larger, i.e. more accurate, cut)."""
+    if staged.cuts is None:
+        raise ValueError("staged tables carry no cut metadata "
+                         "(built outside pack_g/pack_t?)")
+    cuts = np.asarray(staged.cuts)
+    total = int(cuts[:, 1].max())
+    if fraction is not None:
+        if num_transforms is not None:
+            raise ValueError("pass num_transforms or fraction, not both")
+        num_transforms = fraction * total
+    if num_transforms is None:
+        raise ValueError("pass num_transforms or fraction")
+    if num_transforms > 0:
+        # a positive target must never snap to the empty (0, 0) cut — a
+        # zero-component "transform" serves diag-only results silently
+        pos = cuts[cuts[:, 1] > 0]
+        if len(pos):
+            cuts = pos
+    dist = np.abs(cuts[:, 1].astype(np.float64) - float(num_transforms))
+    best = int(np.lexsort((-cuts[:, 1], dist))[0])
+    return int(cuts[best, 0]), int(cuts[best, 1])
+
+
+def _chunk_bounds(g: int, cuts: Optional[Sequence[int]],
+                  significance_tail: bool) -> np.ndarray:
+    """Factor-index barriers (application order) for a significance ladder.
+
+    ``cuts`` lists significance-prefix sizes (component counts).  For the
+    G family significance order is reversed application order
+    (``significance_tail=True``): a significance prefix of k components is
+    the application suffix [g-k, g)."""
+    ladder = (default_cut_ladder(g) if cuts is None
+              else np.asarray(sorted({0, g} | {int(k) for k in cuts
+                                               if 0 <= int(k) <= g}),
+                              np.int64))
+    if significance_tail:
+        return g - ladder[::-1]
+    return ladder
+
+
+def _chunked_schedule(touch_sets, bounds) -> Tuple[np.ndarray, int,
+                                                   np.ndarray]:
+    """ASAP list scheduling with barriers at ``bounds``.
+
+    ``touch_sets``: per-factor coordinate tuples (application order);
+    ``bounds``: ascending factor indices (incl. 0 and len) at which a
+    fresh stage must start.  Returns (stage per factor, num_stages, stage
+    index of every barrier)."""
     stage_of = np.zeros(len(touch_sets), dtype=np.int64)
-    n_stages = 0
-    for k, coords in enumerate(touch_sets):
-        st = 0
-        for c in coords:
-            st = max(st, busy_until.get(int(c), 0))
-        stage_of[k] = st
-        for c in coords:
-            busy_until[int(c)] = st + 1
-        n_stages = max(n_stages, st + 1)
-    return stage_of, n_stages
+    stage_bounds = np.zeros(len(bounds), dtype=np.int64)
+    base = 0
+    for c, (a, b) in enumerate(zip(bounds[:-1], bounds[1:])):
+        busy = {}
+        depth = 0
+        for k in range(a, b):
+            st = 0
+            for coord in touch_sets[k]:
+                st = max(st, busy.get(int(coord), 0))
+            stage_of[k] = base + st
+            for coord in touch_sets[k]:
+                busy[int(coord)] = st + 1
+            depth = max(depth, st + 1)
+        base += depth
+        stage_bounds[c + 1] = base
+    return stage_of, base, stage_bounds
 
 
-def _pad_layout(stage_of, n_stages, n, idx_pairs):
-    """Common padded (S, P) layout: returns (slots, pad_index per stage, P).
+def _pad_layout(stage_of, n_stages):
+    """Common padded (S, P) layout: returns (slots, P).
 
     Padding entries use the OUT-OF-BOUNDS index ``n``: the apply functions
     scatter with mode="drop", so pads are structural no-ops.  (An in-range
     "identity write at an unused index" is unsound: a stage that touches
     all n coordinates has no unused index, and a duplicate scatter index
     clobbers a real factor's write — found by hypothesis.)"""
-    counts = np.bincount(stage_of, minlength=n_stages)
-    width = max(int(counts.max()), 1)
+    counts = np.bincount(stage_of, minlength=max(n_stages, 1))
+    width = max(int(counts.max(initial=1)), 1)
     slot = np.zeros_like(stage_of)
-    seen = np.zeros(n_stages, dtype=np.int64)
+    seen = np.zeros(max(n_stages, 1), dtype=np.int64)
     for k, st in enumerate(stage_of):
         slot[k] = seen[st]
         seen[st] += 1
-    pad_idx = np.full(n_stages, n, dtype=np.int64)
-    return slot, pad_idx, width
+    return slot, width
 
 
-def pack_g(factors: GFactors) -> "StagedG":
+def _cut_table(stage_bounds: np.ndarray, bounds: np.ndarray, g: int,
+               n_stages: int, significance_tail: bool) -> np.ndarray:
+    """(num_stages, num_components) rows for every exact barrier."""
+    if significance_tail:
+        # barrier i leaves application factors [bounds[i], g) — the k =
+        # g - bounds[i] most significant components — in the LAST
+        # n_stages - stage_bounds[i] stages
+        rows = [(n_stages - int(sb), g - int(fb))
+                for sb, fb in zip(stage_bounds, bounds)]
+    else:
+        rows = [(int(sb), int(fb))
+                for sb, fb in zip(stage_bounds, bounds)]
+    uniq = sorted(set(rows))
+    return np.asarray(uniq, np.int64).reshape(-1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) packers; mirrors build adjoint/inverse tables with the
+# SAME stage structure so one num_stages cuts both directions consistently
+# ---------------------------------------------------------------------------
+
+def _pack_g_np(factors: GFactors, n: int, cuts: Optional[Sequence[int]]):
     fi = np.asarray(factors.i)
     fj = np.asarray(factors.j)
     fc = np.asarray(factors.c)
     fs = np.asarray(factors.s)
     fsg = np.asarray(factors.sigma)
-    n = int(max(fi.max(initial=0), fj.max(initial=0))) + 1
+    g = fi.shape[0]
     pairs = [(int(a), int(b)) for a, b in zip(fi, fj)]
-    stage_of, n_stages = _greedy_schedule(pairs)
-    slot, pad_idx, width = _pad_layout(stage_of, n_stages, n, pairs)
+    bounds = _chunk_bounds(g, cuts, significance_tail=True)
+    stage_of, n_stages, stage_bounds = _chunked_schedule(pairs, bounds)
+    slot, width = _pad_layout(stage_of, n_stages)
+    n_stages = max(n_stages, 1)
 
-    ii = np.repeat(pad_idx[:, None], width, axis=1).astype(np.int32)
+    ii = np.full((n_stages, width), n, dtype=np.int32)
     jj = ii.copy()
     cc = np.ones((n_stages, width), fc.dtype)
     ss = np.zeros((n_stages, width), fs.dtype)
@@ -120,25 +284,39 @@ def pack_g(factors: GFactors) -> "StagedG":
     cc[stage_of, slot] = fc
     ss[stage_of, slot] = fs
     sg[stage_of, slot] = fsg
-    return StagedG(jnp.asarray(ii), jnp.asarray(jj), jnp.asarray(cc),
-                   jnp.asarray(ss), jnp.asarray(sg), n)
+    cut = _cut_table(stage_bounds, bounds, g, n_stages,
+                     significance_tail=True)
+    return (ii, jj, cc, ss, sg), cut, stage_bounds
 
 
-def pack_t(factors: TFactors, n: int) -> "StagedT":
+def _mirror_g_np(tables):
+    """Stage-mirror of forward G tables: Ubar^T (reverse stage order;
+    rotations flip s, reflections are symmetric).  Padding entries
+    (c=1, s=0, sigma=1) are fixed points."""
+    ii, jj, cc, ss, sg = tables
+    s_adj = np.where(sg > 0, -ss, ss)
+    return (ii[::-1].copy(), jj[::-1].copy(), cc[::-1].copy(),
+            s_adj[::-1].copy(), sg[::-1].copy())
+
+
+def _pack_t_np(factors: TFactors, n: int, cuts: Optional[Sequence[int]]):
     fk = np.asarray(factors.kind)
     fi = np.asarray(factors.i)
     fj = np.asarray(factors.j)
     fa = np.asarray(factors.a)
+    m = fk.shape[0]
     touch = []
-    for k in range(len(fk)):
+    for k in range(m):
         if fk[k] == SCALE:
             touch.append((int(fi[k]),))
         else:
             touch.append((int(fi[k]), int(fj[k])))
-    stage_of, n_stages = _greedy_schedule(touch)
-    slot, pad_idx, width = _pad_layout(stage_of, n_stages, n, touch)
+    bounds = _chunk_bounds(m, cuts, significance_tail=False)
+    stage_of, n_stages, stage_bounds = _chunked_schedule(touch, bounds)
+    slot, width = _pad_layout(stage_of, n_stages)
+    n_stages = max(n_stages, 1)
 
-    ii = np.repeat(pad_idx[:, None], width, axis=1).astype(np.int32)
+    ii = np.full((n_stages, width), n, dtype=np.int32)
     jj = ii.copy()
     al = np.ones((n_stages, width), fa.dtype)
     be = np.zeros((n_stages, width), fa.dtype)
@@ -147,46 +325,96 @@ def pack_t(factors: TFactors, n: int) -> "StagedT":
     jj[stage_of, slot] = np.where(is_scale, fi, fj)
     al[stage_of, slot] = np.where(is_scale, fa, 1.0)
     be[stage_of, slot] = np.where(is_scale, 0.0, fa)
-    return StagedT(jnp.asarray(ii), jnp.asarray(jj), jnp.asarray(al),
-                   jnp.asarray(be), n)
+    cut = _cut_table(stage_bounds, bounds, m, n_stages,
+                     significance_tail=False)
+    return (ii, jj, al, be), cut, stage_bounds
 
 
-def pack_t_inverse(factors: TFactors, n: int) -> "StagedT":
-    """Staged form of Tbar^{-1} (reverse order; shear a -> -a, scale a -> 1/a)."""
-    kinds = np.asarray(factors.kind)
-    a = np.asarray(factors.a)
-    safe = np.where(kinds == SCALE, a, 1.0)  # shears may carry a == 0
-    inv_a = np.where(kinds == SCALE, 1.0 / safe, -a)
-    rev = TFactors(
-        kind=jnp.asarray(np.asarray(factors.kind)[::-1].copy()),
-        i=jnp.asarray(np.asarray(factors.i)[::-1].copy()),
-        j=jnp.asarray(np.asarray(factors.j)[::-1].copy()),
-        a=jnp.asarray(inv_a[::-1].copy()),
-    )
-    return pack_t(rev, n)
+def _mirror_t_np(tables):
+    """Stage-mirror of forward T tables: Tbar^{-1} (reverse stage order;
+    per entry (alpha, beta) -> (1/alpha, -beta/alpha), which inverts
+    shears (alpha=1: beta -> -beta), scalings (beta=0: alpha -> 1/alpha)
+    and fixes padding (1, 0))."""
+    ii, jj, al, be = tables
+    inv_al = 1.0 / al
+    inv_be = -be / al
+    return (ii[::-1].copy(), jj[::-1].copy(), inv_al[::-1].copy(),
+            inv_be[::-1].copy())
 
 
-def _stack_padded(staged_list, fields, pad_values, n):
-    """Stack per-matrix staged tables into (B, S, P) with no-op padding.
+# ---------------------------------------------------------------------------
+# Public single-matrix packers
+# ---------------------------------------------------------------------------
 
-    Stage counts and widths differ across a batch (the greedy schedule is
-    data-dependent); every table is padded up to the batch maximum with
-    entries that are structural no-ops (out-of-bounds index ``n`` plus the
-    family's identity values), so one (B, S, P) table set drives a single
-    batched kernel launch for all B factorizations (DESIGN.md §7)."""
-    s_max = max(st.num_stages for st in staged_list)
-    p_max = max(st.idx_i.shape[1] for st in staged_list)
-    stacked = []
-    for field, pad in zip(fields, pad_values):
-        mats = []
-        for st in staged_list:
-            arr = np.asarray(getattr(st, field))
-            full = np.full((s_max, p_max), pad, arr.dtype)
-            full[:arr.shape[0], :arr.shape[1]] = arr
-            mats.append(full)
-        stacked.append(jnp.asarray(np.stack(mats)))
-    return stacked
+def _infer_n_g(factors: GFactors) -> int:
+    fi = np.asarray(factors.i)
+    fj = np.asarray(factors.j)
+    return int(max(fi.max(initial=0), fj.max(initial=0))) + 1
 
+
+def pack_g(factors: GFactors,
+           cuts: Optional[Sequence[int]] = None) -> "StagedG":
+    """Stage a G-chain (synthesis direction, Ubar).  ``cuts`` lists
+    component counts that must be exactly cuttable (default: the quarters
+    ladder); significant components land in the TAIL stages."""
+    n = _infer_n_g(factors)
+    tables, cut, _ = _pack_g_np(factors, n, cuts)
+    return StagedG(*map(jnp.asarray, tables), cut, n)
+
+
+def pack_g_adjoint(factors: GFactors,
+                   cuts: Optional[Sequence[int]] = None) -> "StagedG":
+    """Staged form of Ubar^T: the stage-MIRROR of ``pack_g(factors)``
+    (same stages, reversed order, rotations flip s), so the cut ladder of
+    both directions aligns: the k most significant components are the
+    first ``num_stages`` stages here and the last ``num_stages`` stages of
+    the forward tables."""
+    n = _infer_n_g(factors)
+    tables, cut, _ = _pack_g_np(factors, n, cuts)
+    return StagedG(*map(jnp.asarray, _mirror_g_np(tables)), cut, n)
+
+
+def pack_g_pair(factors: GFactors,
+                cuts: Optional[Sequence[int]] = None
+                ) -> Tuple["StagedG", "StagedG"]:
+    """(forward, adjoint) staged forms from ONE scheduling pass — the
+    adjoint is a mirror of the forward tables, so packing both directions
+    separately would run the host scheduler twice for the same chain."""
+    n = _infer_n_g(factors)
+    tables, cut, _ = _pack_g_np(factors, n, cuts)
+    return (StagedG(*map(jnp.asarray, tables), cut, n),
+            StagedG(*map(jnp.asarray, _mirror_g_np(tables)), cut, n))
+
+
+def pack_t(factors: TFactors, n: int,
+           cuts: Optional[Sequence[int]] = None) -> "StagedT":
+    """Stage a T-chain (forward direction, Tbar); significant components
+    land in the HEAD stages."""
+    tables, cut, _ = _pack_t_np(factors, n, cuts)
+    return StagedT(*map(jnp.asarray, tables), cut, n)
+
+
+def pack_t_inverse(factors: TFactors, n: int,
+                   cuts: Optional[Sequence[int]] = None) -> "StagedT":
+    """Staged form of Tbar^{-1}: the stage-mirror of ``pack_t(factors)``
+    (reverse order; shear a -> -a, scale a -> 1/a), cut-aligned with the
+    forward tables (significant components in the TAIL stages here)."""
+    tables, cut, _ = _pack_t_np(factors, n, cuts)
+    return StagedT(*map(jnp.asarray, _mirror_t_np(tables)), cut, n)
+
+
+def pack_t_pair(factors: TFactors, n: int,
+                cuts: Optional[Sequence[int]] = None
+                ) -> Tuple["StagedT", "StagedT"]:
+    """(forward, inverse) staged forms from one scheduling pass."""
+    tables, cut, _ = _pack_t_np(factors, n, cuts)
+    return (StagedT(*map(jnp.asarray, tables), cut, n),
+            StagedT(*map(jnp.asarray, _mirror_t_np(tables)), cut, n))
+
+
+# ---------------------------------------------------------------------------
+# Batched packers: (B, S, P) tables with chunk-uniform padding
+# ---------------------------------------------------------------------------
 
 def _gfactors_slice(factors: GFactors, b: int) -> GFactors:
     return GFactors(*(jnp.asarray(np.asarray(f)[b]) for f in factors))
@@ -196,50 +424,132 @@ def _tfactors_slice(factors: TFactors, b: int) -> TFactors:
     return TFactors(*(jnp.asarray(np.asarray(f)[b]) for f in factors))
 
 
-_G_FIELDS = ("idx_i", "idx_j", "c", "s", "sigma")
-_T_FIELDS = ("idx_i", "idx_j", "alpha", "beta")
+def _stack_chunked(per_matrix, stage_bounds_list, pad_values, n):
+    """Stack per-matrix staged tables into (B, S, P), padding each CHUNK
+    to the batch-max chunk depth (and each stage to the batch-max width).
+
+    Chunk-uniform padding keeps every cut boundary at the SAME stage index
+    for all B matrices, so one static ``num_stages`` cuts the whole batch
+    exactly (DESIGN.md §9).  Pads are structural no-ops (out-of-bounds
+    index ``n`` + identity values)."""
+    num_chunks = len(stage_bounds_list[0]) - 1
+    depths = np.zeros(num_chunks, np.int64)
+    for sb in stage_bounds_list:
+        depths = np.maximum(depths, np.diff(sb))
+    offs = np.concatenate([[0], np.cumsum(depths)])
+    s_max = int(offs[-1]) if offs[-1] > 0 else 1
+    p_max = max(t[0].shape[1] for t in per_matrix)
+    batch = len(per_matrix)
+    stacked = []
+    for f, pad in enumerate(pad_values):
+        arr = np.full((batch, s_max, p_max), pad,
+                      per_matrix[0][f].dtype)
+        for b, tables in enumerate(per_matrix):
+            sb = stage_bounds_list[b]
+            src = tables[f]
+            for c in range(num_chunks):
+                lo, hi = int(sb[c]), int(sb[c + 1])
+                arr[b, int(offs[c]):int(offs[c]) + (hi - lo),
+                    :src.shape[1]] = src[lo:hi]
+        stacked.append(arr)
+    return stacked, offs
 
 
-def pack_g_batch(factors: GFactors, n: int, adjoint: bool = False
-                 ) -> "StagedG":
-    """Pack a batch of G-factor chains (leading (B, g) arrays) into one
-    StagedG whose tables carry a leading batch dim: (B, S, P)."""
-    batch = np.asarray(factors.i).shape[0]
-    staged = []
+def _batch_cut_table(offs, bounds, g, significance_tail):
+    n_stages = int(offs[-1]) if offs[-1] > 0 else 1
+    return _cut_table(offs, bounds, g, n_stages, significance_tail)
+
+
+def _pack_g_batch_np(factors: GFactors, n: int,
+                     cuts: Optional[Sequence[int]]):
+    fi = np.asarray(factors.i)
+    batch, g = fi.shape
+    n = max(n, int(max(fi.max(initial=0),
+                       np.asarray(factors.j).max(initial=0))) + 1)
+    per, sbs = [], []
     for b in range(batch):
-        f = _gfactors_slice(factors, b)
-        staged.append(pack_g_adjoint(f) if adjoint else pack_g(f))
-    pads_n = max(st.n for st in staged)
-    n = max(n, pads_n)
-    ii, jj, cc, ss, sg = _stack_padded(
-        staged, _G_FIELDS, (np.int32(n), np.int32(n), 1.0, 0.0, 1.0), n)
-    return StagedG(ii, jj, cc, ss, sg, n)
+        tables, _, sb = _pack_g_np(_gfactors_slice(factors, b), n, cuts)
+        per.append(tables)
+        sbs.append(sb)
+    pads = (np.int32(n), np.int32(n), 1.0, 0.0, 1.0)
+    stacked, offs = _stack_chunked(per, sbs, pads, n)
+    bounds = _chunk_bounds(g, cuts, significance_tail=True)
+    cut = _batch_cut_table(offs, bounds, g, significance_tail=True)
+    return stacked, cut, n
 
 
-def pack_t_batch(factors: TFactors, n: int, inverse: bool = False
-                 ) -> "StagedT":
-    """Pack a batch of T-factor chains into one StagedT with (B, S, P)
-    tables (``inverse=True`` stages Tbar^{-1} per matrix)."""
-    batch = np.asarray(factors.kind).shape[0]
-    staged = []
+def _mirror_g_batch_np(stacked):
+    """Batched stage-mirror (Ubar^T per matrix): flip the stage axis and
+    adjoint each entry; chunk-uniform padding keeps cut boundaries
+    aligned under the flip."""
+    out = [np.ascontiguousarray(a[:, ::-1]) for a in stacked]
+    sg = out[4]
+    out[3] = np.where(sg > 0, -out[3], out[3])
+    return out
+
+
+def pack_g_batch(factors: GFactors, n: int, adjoint: bool = False,
+                 cuts: Optional[Sequence[int]] = None) -> "StagedG":
+    """Pack a batch of G-factor chains (leading (B, g) arrays) into one
+    StagedG whose tables carry a leading batch dim: (B, S, P).  All B
+    chains share one cut ladder; chunk-uniform padding keeps the ladder's
+    stage boundaries aligned across the batch."""
+    stacked, cut, n = _pack_g_batch_np(factors, n, cuts)
+    if adjoint:
+        stacked = _mirror_g_batch_np(stacked)
+    return StagedG(*map(jnp.asarray, stacked), cut, n)
+
+
+def pack_g_batch_pair(factors: GFactors, n: int,
+                      cuts: Optional[Sequence[int]] = None
+                      ) -> Tuple["StagedG", "StagedG"]:
+    """(forward, adjoint) batched staged forms from ONE scheduling +
+    stacking pass (the O(B·g) host scheduler is the packing cost)."""
+    stacked, cut, n = _pack_g_batch_np(factors, n, cuts)
+    return (StagedG(*map(jnp.asarray, stacked), cut, n),
+            StagedG(*map(jnp.asarray, _mirror_g_batch_np(stacked)),
+                    cut, n))
+
+
+def _pack_t_batch_np(factors: TFactors, n: int,
+                     cuts: Optional[Sequence[int]]):
+    batch, m = np.asarray(factors.kind).shape
+    per, sbs = [], []
     for b in range(batch):
         f = _tfactors_slice(factors, b)
-        staged.append(pack_t_inverse(f, n) if inverse else pack_t(f, n))
-    ii, jj, al, be = _stack_padded(
-        staged, _T_FIELDS, (np.int32(n), np.int32(n), 1.0, 0.0), n)
-    return StagedT(ii, jj, al, be, n)
+        tables, _, sb = _pack_t_np(f, n, cuts)
+        per.append(tables)
+        sbs.append(sb)
+    pads = (np.int32(n), np.int32(n), 1.0, 0.0)
+    stacked, offs = _stack_chunked(per, sbs, pads, n)
+    bounds = _chunk_bounds(m, cuts, significance_tail=False)
+    cut = _batch_cut_table(offs, bounds, m, significance_tail=False)
+    return stacked, cut
 
 
-def pack_g_adjoint(factors: GFactors) -> "StagedG":
-    """Staged form of Ubar^T (reverse order; rotations flip s)."""
-    s = np.asarray(factors.s)
-    sg = np.asarray(factors.sigma)
-    s_adj = np.where(sg > 0, -s, s)
-    rev = GFactors(
-        i=jnp.asarray(np.asarray(factors.i)[::-1].copy()),
-        j=jnp.asarray(np.asarray(factors.j)[::-1].copy()),
-        c=jnp.asarray(np.asarray(factors.c)[::-1].copy()),
-        s=jnp.asarray(s_adj[::-1].copy()),
-        sigma=jnp.asarray(sg[::-1].copy()),
-    )
-    return pack_g(rev)
+def _mirror_t_batch_np(stacked):
+    """Batched stage-mirror (Tbar^{-1} per matrix)."""
+    al, be = stacked[2], stacked[3]
+    out = [stacked[0], stacked[1], 1.0 / al, -be / al]
+    return [np.ascontiguousarray(a[:, ::-1]) for a in out]
+
+
+def pack_t_batch(factors: TFactors, n: int, inverse: bool = False,
+                 cuts: Optional[Sequence[int]] = None) -> "StagedT":
+    """Pack a batch of T-factor chains into one StagedT with (B, S, P)
+    tables (``inverse=True`` mirrors the stages into Tbar^{-1} per
+    matrix), cut-aligned across the batch like ``pack_g_batch``."""
+    stacked, cut = _pack_t_batch_np(factors, n, cuts)
+    if inverse:
+        stacked = _mirror_t_batch_np(stacked)
+    return StagedT(*map(jnp.asarray, stacked), cut, n)
+
+
+def pack_t_batch_pair(factors: TFactors, n: int,
+                      cuts: Optional[Sequence[int]] = None
+                      ) -> Tuple["StagedT", "StagedT"]:
+    """(forward, inverse) batched staged forms from one packing pass."""
+    stacked, cut = _pack_t_batch_np(factors, n, cuts)
+    return (StagedT(*map(jnp.asarray, stacked), cut, n),
+            StagedT(*map(jnp.asarray, _mirror_t_batch_np(stacked)),
+                    cut, n))

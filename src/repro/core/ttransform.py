@@ -275,9 +275,19 @@ def t_init(c_mat: jnp.ndarray, cbar: jnp.ndarray, m: int
     enough to stall the greedy (observed: objective saturates with m).
     Returns (factors in application order, final dense approximation B).
     """
+    b0 = jnp.diag(cbar.astype(c_mat.dtype))
+    return _t_greedy(c_mat, b0, m)
+
+
+def _t_greedy(c_mat: jnp.ndarray, b0: jnp.ndarray, m: int
+              ) -> Tuple[TFactors, jnp.ndarray]:
+    """Greedy Theorem-3 loop from an arbitrary current approximation
+    ``b0`` (= diag(cbar) for a fresh fit; = the fitted reconstruction for
+    a warm-start extension, DESIGN.md §9).  New transforms CONJUGATE the
+    running approximation (B <- T B T^{-1}), i.e. they are appended to the
+    application order."""
     n = c_mat.shape[0]
     dtype = c_mat.dtype
-    b0 = jnp.diag(cbar.astype(dtype))
     e0 = c_mat - b0
     v0 = e0 @ b0.T
     h0 = e0.T @ b0
@@ -502,17 +512,20 @@ def lemma2_spectrum(c_mat: jnp.ndarray, factors: TFactors) -> jnp.ndarray:
     return jnp.linalg.solve(gram + ridge * jnp.eye(n, dtype=c_mat.dtype), rhs)
 
 
-def _approx_gen_core(c_mat, cbar0, m, n_iter, update_spectrum, eps):
-    """Traceable Algorithm-1 body for the general case (jit-free so the
-    batched engine can wrap it in ``jit(vmap(...))``; DESIGN.md §7)."""
-    factors, _ = t_init(c_mat, cbar0, m)
+def _gen_refit_spectrum(c_mat, factors, cbar0, update_spectrum):
+    """Lemma-2 refit with the regression guard: the f32 refit may be
+    worse than the incumbent spectrum on ill-conditioned Tbar — keep
+    whichever reconstructs better."""
     cbar_l2 = lemma2_spectrum(c_mat, factors)
-    # guard: the f32 refit may be worse than the init spectrum on
-    # ill-conditioned Tbar — keep whichever reconstructs better
     keep_l2 = (t_objective(c_mat, factors, cbar_l2)
                < t_objective(c_mat, factors, cbar0))
-    cbar = jnp.where(jnp.logical_and(update_spectrum, keep_l2),
+    return jnp.where(jnp.logical_and(update_spectrum, keep_l2),
                      cbar_l2, cbar0)
+
+
+def _gen_iterate(c_mat, factors, cbar, n_iter, update_spectrum, eps):
+    """Algorithm-1 refinement loop for the general case (shared by the
+    from-scratch fit and the warm-start extension)."""
     obj0 = t_objective(c_mat, factors, cbar)
 
     def iter_body(carry):
@@ -537,6 +550,30 @@ def _approx_gen_core(c_mat, cbar0, m, n_iter, update_spectrum, eps):
     state = (0, factors, cbar, obj0 + 2 * eps + 1.0, obj0, hist0)
     it, factors, cbar, _, obj, hist = lax.while_loop(cond, iter_body, state)
     return factors, cbar, obj, hist, it
+
+
+def _approx_gen_core(c_mat, cbar0, m, n_iter, update_spectrum, eps):
+    """Traceable Algorithm-1 body for the general case (jit-free so the
+    batched engine can wrap it in ``jit(vmap(...))``; DESIGN.md §7)."""
+    factors, _ = t_init(c_mat, cbar0, m)
+    cbar = _gen_refit_spectrum(c_mat, factors, cbar0, update_spectrum)
+    return _gen_iterate(c_mat, factors, cbar, n_iter, update_spectrum, eps)
+
+
+def _extend_gen_core(c_mat, factors0, cbar0, m_extra, n_iter,
+                     update_spectrum, eps):
+    """Warm-start extension for the general case (DESIGN.md §9): continue
+    the Theorem-3 greedy from the fitted reconstruction, so the
+    ``m_extra`` new transforms refine the current residual.  New factors
+    conjugate the running approximation and are therefore APPENDED in
+    application order (extending the discovery order, which for the T
+    family coincides with application order)."""
+    b0 = t_reconstruct(factors0, cbar0.astype(c_mat.dtype))
+    new, _ = _t_greedy(c_mat, b0, m_extra)
+    factors = TFactors(*(jnp.concatenate([of, nf])
+                         for of, nf in zip(factors0, new)))
+    cbar = _gen_refit_spectrum(c_mat, factors, cbar0, update_spectrum)
+    return _gen_iterate(c_mat, factors, cbar, n_iter, update_spectrum, eps)
 
 
 _approx_gen_jit = functools.partial(jax.jit, static_argnames=(

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.staging import StagedG
+from repro.core.staging import StagedG, truncate_staged
 
 DEFAULT_BLOCK_B = 128
 
@@ -80,14 +80,20 @@ def _full_spec(arr):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_b", "interpret"))
+                   static_argnames=("block_b", "interpret", "num_stages",
+                                    "keep"))
 def butterfly_apply(staged: StagedG, x: jnp.ndarray,
                     block_b: int = DEFAULT_BLOCK_B,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool = True,
+                    num_stages: int | None = None,
+                    keep: str = "head") -> jnp.ndarray:
     """y = Ubar @ x for batched x of shape (B, n) (vectors in rows).
 
     x gains one dummy column: padding entries in the stage tables carry
-    index n, which reads/writes the dummy column (a structural no-op)."""
+    index n, which reads/writes the dummy column (a structural no-op).
+    Static ``num_stages`` cuts the stage tables at a prefix boundary
+    (DESIGN.md §9) — the kernel then loops over exactly that many stages."""
+    staged = truncate_staged(staged, num_stages, keep)
     b, n = x.shape
     bb = min(block_b, b)
     grid = (pl.cdiv(b, bb),)
@@ -135,18 +141,24 @@ def _batched_table_spec(arr):
                         (arr.ndim - 1))
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages"))
 def batched_sym_operator_apply(fwd: StagedG, adj: StagedG,
                                diag: jnp.ndarray, x: jnp.ndarray,
                                block_b: int = DEFAULT_BLOCK_B,
-                               interpret: bool = True) -> jnp.ndarray:
+                               interpret: bool = True,
+                               num_stages: int | None = None
+                               ) -> jnp.ndarray:
     """y[b] = Ubar_b diag(d_b) Ubar_b^T x[b] for a batch of factorizations.
 
     Tables are (B, S, P) (see core/staging.py::pack_g_batch), diag (B, n),
     x (B, R, n).  Grid is (B, cdiv(R, block_b)): the batch of matrices maps
     to the first grid axis so each cell stages exactly one matrix's tables
     into VMEM, and each graph's signal rows tile the second axis exactly as
-    in the single-matrix kernel (DESIGN.md §7)."""
+    in the single-matrix kernel (DESIGN.md §7).  Static ``num_stages`` cuts
+    both legs to the same component prefix (adj head / fwd tail)."""
+    adj = truncate_staged(adj, num_stages, "head")
+    fwd = truncate_staged(fwd, num_stages, "tail")
     b, r, n = x.shape
     bb = min(block_b, r)
     grid = (b, pl.cdiv(r, bb))
@@ -180,11 +192,15 @@ def _batched_butterfly_kernel(ii_ref, jj_ref, c_ref, s_ref, sg_ref,
     o_ref[0] = lax.fori_loop(0, ii_ref.shape[1], body, x)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages", "keep"))
 def batched_butterfly_apply(staged: StagedG, x: jnp.ndarray,
                             block_b: int = DEFAULT_BLOCK_B,
-                            interpret: bool = True) -> jnp.ndarray:
+                            interpret: bool = True,
+                            num_stages: int | None = None,
+                            keep: str = "head") -> jnp.ndarray:
     """y[b] = Ubar_b x[b]: tables (B, S, P), x (B, R, n) -> (B, R, n)."""
+    staged = truncate_staged(staged, num_stages, keep)
     b, r, n = x.shape
     bb = min(block_b, r)
     grid = (b, pl.cdiv(r, bb))
@@ -203,11 +219,17 @@ def batched_butterfly_apply(staged: StagedG, x: jnp.ndarray,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_b", "interpret"))
+                   static_argnames=("block_b", "interpret", "num_stages"))
 def sym_operator_apply(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
                        x: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B,
-                       interpret: bool = True) -> jnp.ndarray:
-    """y = Ubar diag(d) Ubar^T x, fused in one VMEM round trip."""
+                       interpret: bool = True,
+                       num_stages: int | None = None) -> jnp.ndarray:
+    """y = Ubar diag(d) Ubar^T x, fused in one VMEM round trip.
+
+    Static ``num_stages`` truncates both legs to the same component
+    prefix (adj head / fwd tail; DESIGN.md §9)."""
+    adj = truncate_staged(adj, num_stages, "head")
+    fwd = truncate_staged(fwd, num_stages, "tail")
     b, n = x.shape
     bb = min(block_b, b)
     grid = (pl.cdiv(b, bb),)

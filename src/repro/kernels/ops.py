@@ -13,13 +13,22 @@ Shape/dtype conventions (DESIGN.md §4):
     single-matrix ops and (B, ..., n) for the batched ops.
   * tables are stored f32; the apply casts them to ``x.dtype`` (bf16
     signals are supported — see tests/test_kernels.py dtype sweeps).
+
+Anytime prefixes (DESIGN.md §9): every op takes a static ``num_stages``.
+``None`` runs the full chain; an integer cuts the staged tables at that
+stage boundary, so a truncated transform costs proportionally fewer
+stages.  Exact component prefixes live at the boundaries recorded in
+``staged.cuts`` (core/staging.py::select_cut picks one).  The fused
+operators cut both legs consistently; the plain applies additionally take
+``keep`` because the significant stages sit at the head or tail of a
+table set depending on family and direction: G fwd / T inverse -> "tail",
+G adjoint / T fwd -> "head".
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.staging import (StagedG, StagedT, pack_g, pack_g_adjoint,
-                                pack_t, pack_t_inverse)
+from repro.core.staging import StagedG, StagedT, pack_g_pair, pack_t_pair
 from repro.core.types import GFactors, TFactors
 from . import butterfly as _bf
 from . import ref as _ref
@@ -28,65 +37,77 @@ from . import spectral as _sp
 
 
 def g_apply(staged: StagedG, x: jnp.ndarray, backend: str = "xla",
-            interpret: bool = True) -> jnp.ndarray:
+            interpret: bool = True, num_stages: int | None = None,
+            keep: str = "head") -> jnp.ndarray:
     """y = Ubar x — the product of extended Givens transforms, eq. (5).
 
     ``staged``: (S, P) tables; ``x``: (..., n), any float dtype.  Returns
-    the same shape/dtype as ``x``.  Cost 6g flops (paper Table 1)."""
+    the same shape/dtype as ``x``.  Cost 6g flops (paper Table 1), or 6g'
+    under a ``num_stages`` prefix cut (``keep="tail"`` for forward/
+    synthesis tables, ``"head"`` for adjoint/analysis tables)."""
     if backend == "xla":
-        return _ref.staged_g_apply(staged, x)
+        return _ref.staged_g_apply(staged, x, num_stages, keep)
     if backend == "pallas":
         flat = x.reshape(-1, x.shape[-1])
-        return _bf.butterfly_apply(staged, flat,
-                                   interpret=interpret).reshape(x.shape)
+        return _bf.butterfly_apply(
+            staged, flat, interpret=interpret, num_stages=num_stages,
+            keep=keep).reshape(x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def t_apply(staged: StagedT, x: jnp.ndarray, backend: str = "xla",
-            interpret: bool = True) -> jnp.ndarray:
+            interpret: bool = True, num_stages: int | None = None,
+            keep: str = "head") -> jnp.ndarray:
     """y = Tbar x — the product of scaling/shear transforms, eq. (10).
 
     ``staged``: (S, P) tables; ``x``: (..., n).  Cost 1 flop per scaling
-    and 2 per shear (paper Table 1)."""
+    and 2 per shear (paper Table 1).  ``keep="head"`` for forward tables,
+    ``"tail"`` for inverse tables under a prefix cut."""
     if backend == "xla":
-        return _ref.staged_t_apply(staged, x)
+        return _ref.staged_t_apply(staged, x, num_stages, keep)
     if backend == "pallas":
         flat = x.reshape(-1, x.shape[-1])
-        return _sh.shear_apply(staged, flat,
-                               interpret=interpret).reshape(x.shape)
+        return _sh.shear_apply(
+            staged, flat, interpret=interpret, num_stages=num_stages,
+            keep=keep).reshape(x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def sym_operator(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
                  x: jnp.ndarray, backend: str = "xla",
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True,
+                 num_stages: int | None = None) -> jnp.ndarray:
     """Sbar x = Ubar diag(d) Ubar^T x — eq. (2) applied as an operator.
 
     ``fwd``/``adj`` are the staged Ubar and Ubar^T (ops.stage_g), ``diag``
     is (n,), ``x`` is (..., n).  The pallas backend fuses all three legs in
-    one VMEM round trip (DESIGN.md §4)."""
+    one VMEM round trip (DESIGN.md §4).  ``num_stages`` truncates both
+    legs to the same component prefix (DESIGN.md §9)."""
     if backend == "xla":
-        return _ref.sym_operator_apply(fwd, adj, diag, x)
+        return _ref.sym_operator_apply(fwd, adj, diag, x, num_stages)
     if backend == "pallas":
         flat = x.reshape(-1, x.shape[-1])
-        return _bf.sym_operator_apply(fwd, adj, diag, flat,
-                                      interpret=interpret).reshape(x.shape)
+        return _bf.sym_operator_apply(
+            fwd, adj, diag, flat, interpret=interpret,
+            num_stages=num_stages).reshape(x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
                  x: jnp.ndarray, backend: str = "xla",
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True,
+                 num_stages: int | None = None) -> jnp.ndarray:
     """Cbar x = Tbar diag(d) Tbar^{-1} x — eq. (7) applied as an operator.
 
     ``fwd``/``inv`` are the staged Tbar and Tbar^{-1} (ops.stage_t),
     ``diag`` is (n,), ``x`` is (..., n)."""
     if backend == "xla":
-        return _ref.gen_operator_apply(fwd, inv, diag, x)
+        return _ref.gen_operator_apply(fwd, inv, diag, x, num_stages)
     if backend == "pallas":
         flat = x.reshape(-1, x.shape[-1])
-        return _sh.gen_operator_apply(fwd, inv, diag, flat,
-                                      interpret=interpret).reshape(x.shape)
+        return _sh.gen_operator_apply(
+            fwd, inv, diag, flat, interpret=interpret,
+            num_stages=num_stages).reshape(x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
@@ -97,37 +118,44 @@ def gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
 
 def batched_sym_operator(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
                          x: jnp.ndarray, backend: str = "xla",
-                         interpret: bool = True) -> jnp.ndarray:
+                         interpret: bool = True,
+                         num_stages: int | None = None) -> jnp.ndarray:
     """y[b] = Ubar_b diag(d_b) Ubar_b^T x[b] for every matrix b.
 
     ``fwd``/``adj``: batched staged tables (B, S, P) from
     core/staging.py::pack_g_batch; ``diag``: (B, n); ``x``: (B, ..., n).
     The pallas path maps the matrix batch onto the first kernel grid axis;
-    the xla path is the vmapped oracle (ref.py)."""
+    the xla path is the vmapped oracle (ref.py).  A ``num_stages`` cut is
+    uniform across the batch (chunk-uniform padding, DESIGN.md §9)."""
     if backend == "xla":
-        return _ref.batched_sym_operator_apply(fwd, adj, diag, x)
+        return _ref.batched_sym_operator_apply(fwd, adj, diag, x,
+                                               num_stages)
     if backend == "pallas":
         b = x.shape[0]
         flat = x.reshape(b, -1, x.shape[-1])
         return _bf.batched_sym_operator_apply(
-            fwd, adj, diag, flat, interpret=interpret).reshape(x.shape)
+            fwd, adj, diag, flat, interpret=interpret,
+            num_stages=num_stages).reshape(x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def batched_gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
                          x: jnp.ndarray, backend: str = "xla",
-                         interpret: bool = True) -> jnp.ndarray:
+                         interpret: bool = True,
+                         num_stages: int | None = None) -> jnp.ndarray:
     """y[b] = Tbar_b diag(d_b) Tbar_b^{-1} x[b] for every matrix b.
 
     ``fwd``/``inv``: batched staged tables (B, S, P) from
     core/staging.py::pack_t_batch; ``diag``: (B, n); ``x``: (B, ..., n)."""
     if backend == "xla":
-        return _ref.batched_gen_operator_apply(fwd, inv, diag, x)
+        return _ref.batched_gen_operator_apply(fwd, inv, diag, x,
+                                               num_stages)
     if backend == "pallas":
         b = x.shape[0]
         flat = x.reshape(b, -1, x.shape[-1])
         return _sh.batched_gen_operator_apply(
-            fwd, inv, diag, flat, interpret=interpret).reshape(x.shape)
+            fwd, inv, diag, flat, interpret=interpret,
+            num_stages=num_stages).reshape(x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
@@ -138,100 +166,115 @@ def batched_gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
 
 def sym_filter_bank(fwd: StagedG, adj: StagedG, gains: jnp.ndarray,
                     x: jnp.ndarray, backend: str = "xla",
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool = True,
+                    num_stages: int | None = None) -> jnp.ndarray:
     """y[f] = Ubar diag(gains_f) Ubar^T x for a bank of F filters.
 
     ``gains``: (F, n), ``x``: (..., n) -> (F, ..., n).  The analysis leg
     runs once and is shared by all F filters; the pallas path additionally
     fuses the whole bank into one kernel launch (kernels/spectral.py)."""
     if backend == "xla":
-        return _ref.sym_filter_bank_apply(fwd, adj, gains, x)
+        return _ref.sym_filter_bank_apply(fwd, adj, gains, x, num_stages)
     if backend == "pallas":
         flat = x.reshape(-1, x.shape[-1])
         out = _sp.sym_filter_bank_apply(fwd, adj, gains, flat,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        num_stages=num_stages)
         return out.reshape((gains.shape[0],) + x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def gen_filter_bank(fwd: StagedT, inv: StagedT, gains: jnp.ndarray,
                     x: jnp.ndarray, backend: str = "xla",
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool = True,
+                    num_stages: int | None = None) -> jnp.ndarray:
     """y[f] = Tbar diag(gains_f) Tbar^{-1} x — the directed bank."""
     if backend == "xla":
-        return _ref.gen_filter_bank_apply(fwd, inv, gains, x)
+        return _ref.gen_filter_bank_apply(fwd, inv, gains, x, num_stages)
     if backend == "pallas":
         flat = x.reshape(-1, x.shape[-1])
         out = _sp.gen_filter_bank_apply(fwd, inv, gains, flat,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        num_stages=num_stages)
         return out.reshape((gains.shape[0],) + x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def batched_sym_filter_bank(fwd: StagedG, adj: StagedG, gains: jnp.ndarray,
                             x: jnp.ndarray, backend: str = "xla",
-                            interpret: bool = True) -> jnp.ndarray:
+                            interpret: bool = True,
+                            num_stages: int | None = None) -> jnp.ndarray:
     """Per-matrix banks: tables (B, S, P), gains (B, F, n), x (B, ..., n)
     -> (B, F, ..., n); one dispatch serves every (matrix, filter) pair."""
     if backend == "xla":
-        return _ref.batched_sym_filter_bank_apply(fwd, adj, gains, x)
+        return _ref.batched_sym_filter_bank_apply(fwd, adj, gains, x,
+                                                  num_stages)
     if backend == "pallas":
         b = x.shape[0]
         flat = x.reshape(b, -1, x.shape[-1])
         out = _sp.batched_sym_filter_bank_apply(fwd, adj, gains, flat,
-                                                interpret=interpret)
+                                                interpret=interpret,
+                                                num_stages=num_stages)
         return out.reshape((b, gains.shape[1]) + x.shape[1:])
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def batched_gen_filter_bank(fwd: StagedT, inv: StagedT, gains: jnp.ndarray,
                             x: jnp.ndarray, backend: str = "xla",
-                            interpret: bool = True) -> jnp.ndarray:
+                            interpret: bool = True,
+                            num_stages: int | None = None) -> jnp.ndarray:
     """Directed per-matrix banks: gains (B, F, n), x (B, ..., n)."""
     if backend == "xla":
-        return _ref.batched_gen_filter_bank_apply(fwd, inv, gains, x)
+        return _ref.batched_gen_filter_bank_apply(fwd, inv, gains, x,
+                                                  num_stages)
     if backend == "pallas":
         b = x.shape[0]
         flat = x.reshape(b, -1, x.shape[-1])
         out = _sp.batched_gen_filter_bank_apply(fwd, inv, gains, flat,
-                                                interpret=interpret)
+                                                interpret=interpret,
+                                                num_stages=num_stages)
         return out.reshape((b, gains.shape[1]) + x.shape[1:])
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def batched_g_apply(staged: StagedG, x: jnp.ndarray,
-                    backend: str = "xla",
-                    interpret: bool = True) -> jnp.ndarray:
+                    backend: str = "xla", interpret: bool = True,
+                    num_stages: int | None = None,
+                    keep: str = "head") -> jnp.ndarray:
     """y[b] = Ubar_b x[b]: tables (B, S, P), x (B, ..., n)."""
     if backend == "xla":
-        return _ref.batched_g_apply(staged, x)
+        return _ref.batched_g_apply(staged, x, num_stages, keep)
     if backend == "pallas":
         b = x.shape[0]
         flat = x.reshape(b, -1, x.shape[-1])
         return _bf.batched_butterfly_apply(
-            staged, flat, interpret=interpret).reshape(x.shape)
+            staged, flat, interpret=interpret, num_stages=num_stages,
+            keep=keep).reshape(x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def batched_t_apply(staged: StagedT, x: jnp.ndarray,
-                    backend: str = "xla",
-                    interpret: bool = True) -> jnp.ndarray:
+                    backend: str = "xla", interpret: bool = True,
+                    num_stages: int | None = None,
+                    keep: str = "head") -> jnp.ndarray:
     """y[b] = Tbar_b x[b]: tables (B, S, P), x (B, ..., n)."""
     if backend == "xla":
-        return _ref.batched_t_apply(staged, x)
+        return _ref.batched_t_apply(staged, x, num_stages, keep)
     if backend == "pallas":
         b = x.shape[0]
         flat = x.reshape(b, -1, x.shape[-1])
         return _sh.batched_shear_apply(
-            staged, flat, interpret=interpret).reshape(x.shape)
+            staged, flat, interpret=interpret, num_stages=num_stages,
+            keep=keep).reshape(x.shape)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 def stage_g(factors: GFactors):
-    """Convenience: (forward, adjoint) staged forms of one G-chain."""
-    return pack_g(factors), pack_g_adjoint(factors)
+    """Convenience: (forward, adjoint) staged forms of one G-chain
+    (one scheduling pass; the adjoint is a stage mirror)."""
+    return pack_g_pair(factors)
 
 
 def stage_t(factors: TFactors, n: int):
     """Convenience: (forward, inverse) staged forms of one T-chain."""
-    return pack_t(factors, n), pack_t_inverse(factors, n)
+    return pack_t_pair(factors, n)

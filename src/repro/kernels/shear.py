@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.staging import StagedT
+from repro.core.staging import StagedT, truncate_staged
 from .butterfly import _batched_table_spec
 
 DEFAULT_BLOCK_B = 128
@@ -63,13 +63,19 @@ def _full_spec(arr):
     return pl.BlockSpec(arr.shape, lambda b: (0,) * arr.ndim)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages", "keep"))
 def shear_apply(staged: StagedT, x: jnp.ndarray,
                 block_b: int = DEFAULT_BLOCK_B,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool = True,
+                num_stages: int | None = None,
+                keep: str = "head") -> jnp.ndarray:
     """y = Tbar @ x for batched x of shape (B, n).
 
-    One dummy column absorbs padding entries (index n no-ops)."""
+    One dummy column absorbs padding entries (index n no-ops).  Static
+    ``num_stages`` cuts the stage tables at a prefix boundary
+    (DESIGN.md §9)."""
+    staged = truncate_staged(staged, num_stages, keep)
     b, n = x.shape
     bb = min(block_b, b)
     grid = (pl.cdiv(b, bb),)
@@ -87,11 +93,18 @@ def shear_apply(staged: StagedT, x: jnp.ndarray,
     return out[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages"))
 def gen_operator_apply(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
                        x: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B,
-                       interpret: bool = True) -> jnp.ndarray:
-    """y = Tbar diag(d) Tbar^{-1} x, fused."""
+                       interpret: bool = True,
+                       num_stages: int | None = None) -> jnp.ndarray:
+    """y = Tbar diag(d) Tbar^{-1} x, fused.
+
+    Static ``num_stages`` truncates both legs to the same component
+    prefix (inv tail / fwd head; DESIGN.md §9)."""
+    inv = truncate_staged(inv, num_stages, "tail")
+    fwd = truncate_staged(fwd, num_stages, "head")
     b, n = x.shape
     bb = min(block_b, b)
     grid = (pl.cdiv(b, bb),)
@@ -123,11 +136,15 @@ def _batched_shear_kernel(ii_ref, jj_ref, a_ref, b_ref, x_ref, o_ref):
     o_ref[0] = lax.fori_loop(0, ii_ref.shape[1], body, x)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages", "keep"))
 def batched_shear_apply(staged: StagedT, x: jnp.ndarray,
                         block_b: int = DEFAULT_BLOCK_B,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret: bool = True,
+                        num_stages: int | None = None,
+                        keep: str = "head") -> jnp.ndarray:
     """y[b] = Tbar_b x[b]: tables (B, S, P), x (B, R, n) -> (B, R, n)."""
+    staged = truncate_staged(staged, num_stages, keep)
     b, r, n = x.shape
     bb = min(block_b, r)
     grid = (b, pl.cdiv(r, bb))
@@ -167,13 +184,19 @@ def _batched_fused_gen_kernel(iii_ref, ijj_ref, ia_ref, ib_ref,
     o_ref[0] = lax.fori_loop(0, fii_ref.shape[1], fwd_body, x)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages"))
 def batched_gen_operator_apply(fwd: StagedT, inv: StagedT,
                                diag: jnp.ndarray, x: jnp.ndarray,
                                block_b: int = DEFAULT_BLOCK_B,
-                               interpret: bool = True) -> jnp.ndarray:
+                               interpret: bool = True,
+                               num_stages: int | None = None
+                               ) -> jnp.ndarray:
     """y[b] = Tbar_b diag(d_b) Tbar_b^{-1} x[b] for a batch of directed
-    factorizations: tables (B, S, P), diag (B, n), x (B, R, n)."""
+    factorizations: tables (B, S, P), diag (B, n), x (B, R, n).  Static
+    ``num_stages`` cuts both legs (inv tail / fwd head)."""
+    inv = truncate_staged(inv, num_stages, "tail")
+    fwd = truncate_staged(fwd, num_stages, "head")
     b, r, n = x.shape
     bb = min(block_b, r)
     grid = (b, pl.cdiv(r, bb))

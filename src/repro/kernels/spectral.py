@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.staging import StagedG, StagedT
+from repro.core.staging import StagedG, StagedT, truncate_staged
 from .butterfly import _batched_table_spec, _full_spec
 from .butterfly import _stage_body as _g_stage
 from .shear import _stage_body as _t_stage
@@ -95,12 +95,18 @@ def _batched_bank_gen_kernel(iii, ijj, ia, ib, fii, fjj, fa, fb, d_ref,
         o_ref[0, f] = _t_chain(y, fii, fjj, fa, fb, prefix=(0,))
 
 
-def _g_tables(fwd: StagedG, adj: StagedG):
+def _g_tables(fwd: StagedG, adj: StagedG, num_stages=None):
+    """Analysis (adj, head-cut) + synthesis (fwd, tail-cut) tables
+    truncated to the same component prefix (DESIGN.md §9)."""
+    adj = truncate_staged(adj, num_stages, "head")
+    fwd = truncate_staged(fwd, num_stages, "tail")
     return (adj.idx_i, adj.idx_j, adj.c, adj.s, adj.sigma,
             fwd.idx_i, fwd.idx_j, fwd.c, fwd.s, fwd.sigma)
 
 
-def _t_tables(fwd: StagedT, inv: StagedT):
+def _t_tables(fwd: StagedT, inv: StagedT, num_stages=None):
+    inv = truncate_staged(inv, num_stages, "tail")
+    fwd = truncate_staged(fwd, num_stages, "head")
     return (inv.idx_i, inv.idx_j, inv.alpha, inv.beta,
             fwd.idx_i, fwd.idx_j, fwd.alpha, fwd.beta)
 
@@ -147,44 +153,55 @@ def _batched_bank_call(kernel, tables, gains, x, block_b, interpret):
     return out[..., :n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages"))
 def sym_filter_bank_apply(fwd: StagedG, adj: StagedG, gains: jnp.ndarray,
                           x: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B,
-                          interpret: bool = True) -> jnp.ndarray:
+                          interpret: bool = True,
+                          num_stages: int | None = None) -> jnp.ndarray:
     """y[f] = Ubar diag(gains_f) Ubar^T x, all F filters in one launch.
 
-    ``gains``: (F, n), ``x``: (R, n) -> (F, R, n)."""
-    return _bank_call(_bank_sym_kernel, _g_tables(fwd, adj), gains, x,
-                      block_b, interpret)
+    ``gains``: (F, n), ``x``: (R, n) -> (F, R, n).  Static ``num_stages``
+    cuts both transform legs to the same component prefix."""
+    return _bank_call(_bank_sym_kernel, _g_tables(fwd, adj, num_stages),
+                      gains, x, block_b, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages"))
 def gen_filter_bank_apply(fwd: StagedT, inv: StagedT, gains: jnp.ndarray,
                           x: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B,
-                          interpret: bool = True) -> jnp.ndarray:
+                          interpret: bool = True,
+                          num_stages: int | None = None) -> jnp.ndarray:
     """y[f] = Tbar diag(gains_f) Tbar^{-1} x — the directed bank."""
-    return _bank_call(_bank_gen_kernel, _t_tables(fwd, inv), gains, x,
-                      block_b, interpret)
+    return _bank_call(_bank_gen_kernel, _t_tables(fwd, inv, num_stages),
+                      gains, x, block_b, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages"))
 def batched_sym_filter_bank_apply(fwd: StagedG, adj: StagedG,
                                   gains: jnp.ndarray, x: jnp.ndarray,
                                   block_b: int = DEFAULT_BLOCK_B,
-                                  interpret: bool = True) -> jnp.ndarray:
+                                  interpret: bool = True,
+                                  num_stages: int | None = None
+                                  ) -> jnp.ndarray:
     """Per-matrix banks: tables (B, S, P), gains (B, F, n), x (B, R, n)
     -> (B, F, R, n).  Grid (B, ⌈R/block_b⌉) as in butterfly.py."""
     return _batched_bank_call(_batched_bank_sym_kernel,
-                              _g_tables(fwd, adj), gains, x, block_b,
-                              interpret)
+                              _g_tables(fwd, adj, num_stages), gains, x,
+                              block_b, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "num_stages"))
 def batched_gen_filter_bank_apply(fwd: StagedT, inv: StagedT,
                                   gains: jnp.ndarray, x: jnp.ndarray,
                                   block_b: int = DEFAULT_BLOCK_B,
-                                  interpret: bool = True) -> jnp.ndarray:
+                                  interpret: bool = True,
+                                  num_stages: int | None = None
+                                  ) -> jnp.ndarray:
     """Directed per-matrix banks: gains (B, F, n), x (B, R, n)."""
     return _batched_bank_call(_batched_bank_gen_kernel,
-                              _t_tables(fwd, inv), gains, x, block_b,
-                              interpret)
+                              _t_tables(fwd, inv, num_stages), gains, x,
+                              block_b, interpret)

@@ -9,6 +9,11 @@ CPU smoke (FGFT — many graphs per step, DESIGN.md §7):
   python -m repro.launch.serve --fgft --graphs 8 --graph-n 64 \
       --transforms 384 --filter-steps 20
 
+CPU smoke (anytime quality tiers — per-step accuracy/latency dial,
+DESIGN.md §9; add --directed for the T-transform family):
+  python -m repro.launch.serve --fgft --graphs 8 --graph-n 64 \
+      --tiers full:1.0,balanced:0.5,draft:0.25 --filter-steps 20
+
 CPU smoke (spectral filter bank — F responses per graph per step through
 the fused analysis->scale->synthesis path, DESIGN.md §8):
   python -m repro.launch.serve --filter heat,tikhonov,wavelets:4 \
@@ -23,13 +28,16 @@ masked out, which is the SPMD-friendly form of request eviction).
 The FGFT engine factorizes a whole fleet of graph Laplacians in ONE jitted
 fit (core/eigenbasis.py) and then serves spectral-filter requests for all
 graphs per step through the batched fused ``Ubar diag(d) Ubar^T`` kernel —
-B graph Fourier transforms per dispatch instead of one.
+B graph Fourier transforms per dispatch instead of one.  Named quality
+TIERS map to anytime prefixes of the staged tables: each tier is its own
+jitted program over the cut tables (fewer stages -> proportionally less
+work), selectable per step, with per-tier counts in the serve stats.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +46,30 @@ import numpy as np
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as tfm
+
+DEFAULT_TIERS = {"full": 1.0, "balanced": 0.5, "draft": 0.25}
+
+
+def parse_tiers(spec: str) -> Dict[str, float]:
+    """'full:1.0,balanced:0.5,draft:0.25' -> {name: component fraction}."""
+    tiers = {}
+    for token in filter(None, spec.split(",")):
+        name, _, frac = token.partition(":")
+        if not frac:
+            raise ValueError(f"tier {token!r} needs name:fraction")
+        f = float(frac)
+        if not 0.0 < f <= 1.0:
+            raise ValueError(f"tier fraction must be in (0, 1], got {f}")
+        name = name.strip()
+        if not name:
+            raise ValueError(f"tier {token!r} has an empty name")
+        if name in tiers:
+            # silent last-wins would quietly redefine the speedup baseline
+            raise ValueError(f"duplicate tier name {name!r}")
+        tiers[name] = f
+    if not tiers:
+        raise ValueError("empty tier spec")
+    return tiers
 
 
 def parse_args(argv=None):
@@ -63,6 +95,18 @@ def parse_args(argv=None):
     ap.add_argument("--signals", type=int, default=32,
                     help="signal rows filtered per graph per step")
     ap.add_argument("--backend", choices=("xla", "pallas"), default="xla")
+    ap.add_argument("--directed", action="store_true",
+                    help="serve DIRECTED graph Laplacians through the "
+                         "T-transform family (kind='general'); without "
+                         "this flag symmetric inputs route through the "
+                         "G path")
+    ap.add_argument("--tiers", default=None,
+                    help="named anytime quality tiers as "
+                         "'name:fraction,...' of the fundamental "
+                         "components, e.g. 'full:1.0,balanced:0.5,"
+                         "draft:0.25' (default).  Each tier compiles one "
+                         "jitted program over the prefix-cut staged "
+                         "tables (DESIGN.md §9)")
     ap.add_argument("--filter", default=None,
                     help="serve a spectral filter BANK through the fused "
                          "analysis->scale->synthesis path (implies "
@@ -74,33 +118,71 @@ def parse_args(argv=None):
         args.fgft = True
     if not args.fgft and args.arch is None:
         ap.error("--arch is required unless --fgft/--filter is given")
+    args.tier_map = (parse_tiers(args.tiers) if args.tiers
+                     else dict(DEFAULT_TIERS))
     return args
 
 
 class FGFTServeEngine:
-    """Batched spectral-filter serving over a fleet of graphs.
+    """Batched spectral-filter serving over a fleet of graphs, with
+    anytime quality tiers.
 
     One ``ApproxEigenbasis.fit`` factorizes all B Laplacians inside a
     single jit; every ``step`` then filters a (B, R, n) signal block with
-    one batched fused-kernel dispatch (DESIGN.md §7)."""
+    one batched fused-kernel dispatch (DESIGN.md §7).  ``tiers`` maps tier
+    names to component fractions; each resolves to the nearest exact stage
+    cut of the staged tables and compiles its OWN jitted program over the
+    truncated (B, S', P) tables, so a draft-tier step costs proportionally
+    fewer stages (DESIGN.md §9).  Symmetric fits refit the spectrum per
+    tier (Lemma 1 on the prefix basis); general fits reuse the full-fit
+    spectrum (a per-tier Lemma-2 refit needs a dense solve per graph).
+
+    ``kind`` is forwarded to the fit ("auto" detects symmetry; pass
+    "general" to force the T-transform family for directed Laplacians);
+    ``hint`` keeps auto-detection but warns when it overrides the caller's
+    expectation."""
 
     def __init__(self, laps: jnp.ndarray, num_transforms: int,
                  n_iter: int = 3, backend: str = "xla", mesh=None,
-                 filters: Optional[str] = None):
+                 filters: Optional[str] = None, kind: str = "auto",
+                 hint: Optional[str] = None,
+                 tiers: Optional[Dict[str, float]] = None):
         # deferred import: repro.core builds jnp constants at import time,
         # and launch modules must not touch jax state before mesh setup
+        import functools
         from repro.core import ApproxEigenbasis
         self.backend = backend
+        laps = jnp.asarray(laps, jnp.float32)
         self.basis = ApproxEigenbasis.fit(
-            jnp.asarray(laps, jnp.float32), num_transforms, n_iter=n_iter,
-            mesh=mesh)
+            laps, num_transforms, n_iter=n_iter, mesh=mesh, kind=kind,
+            hint=hint)
         if mesh is not None:
             self.basis = self.basis.shard(mesh)
-        # one jitted program serves all B graphs per dispatch; the staged
-        # tables are closure constants so the whole filter fuses
-        self._step = jax.jit(
-            lambda x, d: self.basis.project(x, h=lambda _: d,
-                                            backend=self.backend))
+        # one jitted program per tier serves all B graphs per dispatch;
+        # the truncated staged tables are closure constants so the whole
+        # filter fuses at each tier's stage count
+        full_stages = int(self.basis.fwd.num_stages)
+        self.tiers: Dict[str, dict] = {}
+        self._tier_fns = {}
+        for name, frac in (tiers or {"full": 1.0}).items():
+            n_stages, n_comp = self.basis.select_tier(fraction=frac)
+            cut = None if n_stages >= full_stages else n_stages
+            self.tiers[name] = {
+                "num_stages": n_stages,
+                "num_transforms": n_comp,
+                "spectrum": self._tier_spectrum(laps, cut),
+            }
+            self._tier_fns[name] = jax.jit(functools.partial(
+                lambda x, d, ns: self.basis.project(
+                    x, h=lambda _: d, backend=self.backend, num_stages=ns),
+                ns=cut))
+        # default tier = highest quality in the map, whatever its name
+        self.default_tier = max(
+            self.tiers, key=lambda k: self.tiers[k]["num_transforms"])
+        self.stats = {"steps": {name: 0 for name in self.tiers},
+                      "tiers": {name: {k: t[k] for k in
+                                       ("num_stages", "num_transforms")}
+                                for name, t in self.tiers.items()}}
         self.bank = None
         if filters:
             from repro.spectral import SpectralFilterBank, named_responses
@@ -112,39 +194,67 @@ class FGFTServeEngine:
             self._bank_step = jax.jit(
                 lambda x: self.bank.apply(x, backend=self.backend))
 
-    def step(self, signals: jnp.ndarray, h=None) -> jnp.ndarray:
-        """Filter one (B, R, n) signal block on every graph at once."""
-        d = self.basis.spectrum if h is None else h(self.basis.spectrum)
-        return self._step(signals, d)
+    def _tier_spectrum(self, laps: jnp.ndarray,
+                       num_stages: Optional[int]) -> jnp.ndarray:
+        """Spectrum served by a tier: Lemma-1 refit on the prefix basis
+        for the symmetric family (diag(U'^T L U') per graph), the full-fit
+        spectrum otherwise."""
+        if num_stages is None or self.basis.kind != "sym":
+            return self.basis.spectrum
+        u = self.basis.to_dense(num_stages=num_stages)
+        return jnp.einsum("...ji,...jk,...ki->...i", u, laps, u)
+
+    def step(self, signals: jnp.ndarray, h=None,
+             tier: Optional[str] = None) -> jnp.ndarray:
+        """Filter one (B, R, n) signal block on every graph at once, at
+        the requested quality tier (default: the highest-quality tier in
+        the map, whatever its name).  ``h`` maps the tier's (refit) graph
+        frequencies to gains."""
+        tier = tier if tier is not None else self.default_tier
+        t = self.tiers[tier]
+        d = t["spectrum"] if h is None else h(t["spectrum"])
+        self.stats["steps"][tier] += 1
+        return self._tier_fns[tier](signals, d)
 
     def step_bank(self, signals: jnp.ndarray) -> jnp.ndarray:
         """All F bank responses on every graph: (B, R, n) ->
-        (B, F, R, n), one fused dispatch."""
+        (B, F, R, n), one fused dispatch (full tier)."""
         if self.bank is None:
             raise ValueError("engine was built without --filter responses")
         return self._bank_step(signals)
 
 
 def serve_fgft(args) -> dict:
-    """Build B graph Laplacians, fit them in one jit, serve filter steps."""
+    """Build B graph Laplacians, fit them in one jit, serve filter steps
+    at every configured quality tier."""
     from repro.core.fgft import laplacian
-    from repro.graphs import community_graph
+    from repro.graphs import community_graph, directed_variant
 
     b, n = args.graphs, args.graph_n
     g = args.transforms or int(2 * n * np.log2(n))
-    laps = np.stack([laplacian(community_graph(n, seed=s))
-                     for s in range(b)])
+    adjs = [community_graph(n, seed=s) for s in range(b)]
+    if args.directed:
+        adjs = [directed_variant(a, seed=s) for s, a in enumerate(adjs)]
+    laps = np.stack([laplacian(a) for a in adjs])
+    # --directed pins the factorization family explicitly: a numerically
+    # symmetric directed Laplacian must NOT silently reroute through the
+    # G path (the T path was unreachable from the service before this
+    # flag existed)
+    kind = "general" if args.directed else "auto"
     mesh = make_local_mesh()
     t0 = time.time()
     engine = FGFTServeEngine(jnp.asarray(laps), g, backend=args.backend,
-                             mesh=mesh, filters=args.filter)
+                             mesh=mesh, filters=args.filter, kind=kind,
+                             tiers=args.tier_map)
     fit_s = time.time() - t0
-    rel = np.asarray(engine.basis.objective) / (laps * laps).sum((1, 2))
+    denom = (laps * laps).sum((1, 2))
+    rel = np.asarray(engine.basis.objective) / np.maximum(denom, 1e-30)
     rng = np.random.default_rng(args.seed)
     x = jnp.asarray(rng.standard_normal(
         (b, args.signals, n)).astype(np.float32))
-    print(f"[fgft] fitted {b} graphs (n={n}, g={g}) in one jit: "
-          f"{fit_s:.1f}s, mean rel error {rel.mean():.4f}")
+    print(f"[fgft] fitted {b} graphs (n={n}, g={g}, "
+          f"kind={engine.basis.kind}) in one jit: {fit_s:.1f}s, "
+          f"mean rel error {rel.mean():.4f}")
     if args.filter:
         f = len(engine.bank)
         y = jax.block_until_ready(engine.step_bank(x))   # warmup/compile
@@ -162,17 +272,34 @@ def serve_fgft(args) -> dict:
         return {"rel_error": rel, "responses_per_s": served / dt,
                 "filters": engine.bank.names}
     lowpass = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
-    y = jax.block_until_ready(engine.step(x, lowpass))   # warmup/compile
-    t0 = time.time()
-    for _ in range(args.filter_steps):
-        y = engine.step(x, lowpass)
-    jax.block_until_ready(y)
-    dt = max(time.time() - t0, 1e-9)                     # --filter-steps 0 ok
-    served = args.filter_steps * b
-    print(f"[fgft] served {served} graph-filter requests "
-          f"({served * args.signals} signals) in {dt:.2f}s — "
-          f"{served / dt:.1f} graph-transforms/s [{args.backend}]")
-    return {"rel_error": rel, "transforms_per_s": served / dt}
+    tier_stats = {}
+    for name, tier in engine.tiers.items():
+        y = jax.block_until_ready(engine.step(x, lowpass, tier=name))
+        engine.stats["steps"][name] = 0      # warmup/compile doesn't count
+        t0 = time.time()
+        for _ in range(args.filter_steps):
+            y = engine.step(x, lowpass, tier=name)
+        jax.block_until_ready(y)
+        dt = max(time.time() - t0, 1e-9)                 # --filter-steps 0 ok
+        served = args.filter_steps * b
+        tier_stats[name] = {
+            "transforms_per_s": served / dt,
+            "num_stages": tier["num_stages"],
+            "num_transforms": tier["num_transforms"],
+        }
+        print(f"[fgft]   tier {name!r}: g'={tier['num_transforms']}/{g} "
+              f"({tier['num_stages']} stages) — {served / dt:.1f} "
+              f"graph-transforms/s [{args.backend}]")
+    # headline number: the highest-quality tier (back-compat key)
+    base = tier_stats[engine.default_tier]["transforms_per_s"]
+    for name, ts in tier_stats.items():
+        ts["speedup_vs_full"] = ts["transforms_per_s"] / base
+    served = args.filter_steps * b * len(engine.tiers)
+    print(f"[fgft] served {served} graph-filter requests across "
+          f"{len(engine.tiers)} tiers ({engine.stats['steps']})")
+    return {"rel_error": rel, "transforms_per_s": base,
+            "kind": engine.basis.kind, "tiers": tier_stats,
+            "stats": engine.stats}
 
 
 class ServeEngine:

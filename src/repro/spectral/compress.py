@@ -55,10 +55,15 @@ class Compressed:
 
     @property
     def retained_energy(self) -> jnp.ndarray:
-        """Kept / total coefficient energy per signal row, in [0, 1]."""
+        """Kept / total coefficient energy per signal row, in [0, 1].
+
+        All-zero rows (zero signal, or any signal on an empty graph's
+        null spectrum) have no energy to lose: they report 1.0, never
+        NaN/inf — the epsilon alone is not enough, since a subnormal
+        total would still divide to garbage in f32."""
         total = jnp.sum(self.coeff * self.coeff, axis=-1)
         kept = jnp.sum(self.kept * self.kept, axis=-1)
-        return kept / jnp.maximum(total, 1e-30)
+        return jnp.where(total > 0, kept / jnp.maximum(total, 1e-30), 1.0)
 
 
 def compress(basis, x: jnp.ndarray, k: int,

@@ -157,3 +157,196 @@ def test_fgft_serve_engine_smoke():
     assert out["rel_error"].shape == (3,)
     assert np.all(out["rel_error"] < 0.5)
     assert out["transforms_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Anytime subsystem (DESIGN.md §9): warm-start extension, auto-kind hint,
+# tiered serving, prefix metadata persistence.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make,n_iter", [(_sym_batch, 0), (_sym_batch, 2),
+                                         (_gen_batch, 0), (_gen_batch, 2)])
+def test_extend_never_increases_objective(make, n_iter):
+    mats = make(3, 16, seed=21)
+    base = ApproxEigenbasis.fit(mats, 24, n_iter=n_iter)
+    grown = base.extend(mats, 48, n_iter=n_iter)
+    assert grown.num_transforms == 48
+    obj0 = np.asarray(base.objective)
+    obj1 = np.asarray(grown.objective)
+    assert np.all(obj1 <= obj0 * (1 + 1e-5) + 1e-5), (obj0, obj1)
+    # the extension is consistent: reported objective == dense residual
+    np.testing.assert_allclose(np.asarray(grown.frobenius_error(mats)),
+                               obj1, rtol=1e-3, atol=1e-3)
+
+
+def test_extend_continues_the_greedy_exactly():
+    """With no polish sweeps the greedy is sequential, so extending a
+    g1-component init to g2 must reproduce the from-scratch g2 init
+    bit-for-bit (same discovery sequence) — the strongest correctness
+    check on the warm start."""
+    mats = _sym_batch(2, 16, seed=22)
+    a = ApproxEigenbasis.fit(mats, 20, n_iter=0).extend(mats, 40, n_iter=0)
+    b = ApproxEigenbasis.fit(mats, 40, n_iter=0)
+    for fa, fb in zip(a.factors, b.factors):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    np.testing.assert_allclose(np.asarray(a.objective),
+                               np.asarray(b.objective), rtol=1e-6)
+
+
+def test_extend_validates_arguments():
+    mats = _sym_batch(2, 12, seed=23)
+    base = ApproxEigenbasis.fit(mats, 16, n_iter=0)
+    with pytest.raises(ValueError):
+        base.extend(mats, 16)          # must grow
+    with pytest.raises(ValueError):
+        base.extend(mats[0], 32)       # batched fit needs batched mats
+    with pytest.raises(ValueError):
+        base.extend(_sym_batch(2, 16, seed=24), 32)  # wrong n
+
+
+def test_fit_auto_warns_when_overriding_hint():
+    mats = _sym_batch(2, 12, seed=25)   # numerically symmetric
+    with pytest.warns(UserWarning, match="overriding the caller hint"):
+        basis = ApproxEigenbasis.fit(mats, 16, n_iter=0, hint="general")
+    assert basis.kind == "sym"
+    # an explicit kind is honored silently — the hint only guards "auto"
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        forced = ApproxEigenbasis.fit(mats, 16, n_iter=0, kind="general")
+    assert forced.kind == "general"
+    # non-canonical hints are caught at the call site, not half-warned
+    with pytest.raises(ValueError, match="unknown hint"):
+        ApproxEigenbasis.fit(mats, 16, n_iter=0, hint="symmetric")
+
+
+def test_select_tier_and_prefix_project_matches_prefix_basis():
+    mats = _sym_batch(3, 16, seed=26)
+    basis = ApproxEigenbasis.fit(mats, 48, n_iter=1)
+    num_stages, k = basis.select_tier(fraction=0.5)
+    assert 0 < k < 48
+    x = jnp.asarray(np.random.default_rng(27).standard_normal(
+        (3, 4, 16)).astype(np.float32))
+    got = basis.apply(x, num_stages=num_stages)
+    # reference: per-matrix staged apply of the significance-prefix chain
+    from repro.core.staging import _gfactors_slice
+    from repro.core.types import GFactors
+    for i in range(3):
+        f = _gfactors_slice(basis.factors, i)
+        pre = GFactors(*(arr[48 - k:] for arr in f))
+        fwd, _ = ops.stage_g(pre)
+        want = ops.g_apply(fwd, x[i])
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_save_load_preserves_stage_cuts(tmp_path):
+    mats = _sym_batch(2, 16, seed=28)
+    basis = ApproxEigenbasis.fit(mats, 32, n_iter=0)
+    basis.save(tmp_path, step=1)
+    loaded = ApproxEigenbasis.load(tmp_path)
+    np.testing.assert_array_equal(np.asarray(basis.stage_cuts),
+                                  np.asarray(loaded.stage_cuts))
+    import json
+    import pathlib
+    manifest = json.loads((pathlib.Path(tmp_path) / "step_000000001" /
+                           "manifest.json").read_text())
+    meta = manifest["metadata"]["eigenbasis"]
+    assert meta["stage_cuts"] == np.asarray(basis.stage_cuts).tolist()
+    assert meta["num_stages"] == int(basis.fwd.num_stages)
+
+
+def test_fgft_serve_engine_tiers():
+    from repro.launch.serve import serve_fgft, parse_args
+    args = parse_args(["--fgft", "--graphs", "2", "--graph-n", "16",
+                       "--transforms", "64", "--filter-steps", "2",
+                       "--signals", "4",
+                       "--tiers", "full:1.0,draft:0.25"])
+    out = serve_fgft(args)
+    assert set(out["tiers"]) == {"full", "draft"}
+    assert out["tiers"]["draft"]["num_transforms"] < 64
+    # warmup/compile is excluded: counters match the timed filter-steps
+    assert out["stats"]["steps"] == {"full": 2, "draft": 2}
+    # draft tier must run strictly fewer stages
+    assert (out["tiers"]["draft"]["num_stages"]
+            < out["tiers"]["full"]["num_stages"])
+
+
+def test_fgft_serve_engine_directed_kind():
+    """--directed must reach the T-transform family (the kind= plumbing
+    this PR adds; the service used to silently auto-route)."""
+    from repro.launch.serve import serve_fgft, parse_args
+    args = parse_args(["--fgft", "--directed", "--graphs", "2",
+                       "--graph-n", "12", "--transforms", "24",
+                       "--filter-steps", "1", "--signals", "2",
+                       "--tiers", "full:1.0"])
+    out = serve_fgft(args)
+    assert out["kind"] == "general"
+    assert np.all(np.isfinite(out["rel_error"]))
+    assert out["transforms_per_s"] > 0
+
+
+def test_serve_step_defaults_to_best_tier_and_rejects_dup_tiers():
+    """step() must not assume a tier literally named "full" exists; the
+    default is the highest-quality tier in the map.  Duplicate tier names
+    are rejected (silent last-wins would redefine the speedup baseline)."""
+    from repro.launch.serve import FGFTServeEngine, parse_tiers
+    import pytest as _pytest
+    from repro.core.fgft import laplacian
+    from repro.graphs import community_graph
+    laps = np.stack([laplacian(community_graph(12, seed=s))
+                     for s in range(2)])
+    engine = FGFTServeEngine(jnp.asarray(laps), 24, n_iter=0,
+                             tiers={"hq": 1.0, "draft": 0.25})
+    assert engine.default_tier == "hq"
+    x = jnp.ones((2, 3, 12), jnp.float32)
+    y = engine.step(x)                     # no KeyError without "full"
+    assert y.shape == x.shape
+    assert engine.stats["steps"]["hq"] == 1
+    with _pytest.raises(ValueError, match="duplicate tier"):
+        parse_tiers("full:1.0,full:0.25")
+    with _pytest.raises(ValueError, match="empty name"):
+        parse_tiers("full:1.0,:0.25")
+
+
+def test_select_tier_never_picks_the_empty_cut():
+    """Regression: a small positive fraction must snap to the smallest
+    REAL cut, not to (0, 0) — a zero-component tier silently serves
+    diag-only results."""
+    mats = _sym_batch(2, 16, seed=31)
+    basis = ApproxEigenbasis.fit(mats, 32, n_iter=0)
+    ns, k = basis.select_tier(fraction=0.05)
+    assert k > 0 and ns > 0
+
+
+def test_extend_keeps_original_g_as_a_tier():
+    """Regression: the extended tables' ladder must contain the original
+    g even when it is not on the new default quarters ladder, so the
+    pre-extension basis stays selectable (README's tier claim)."""
+    mats = _sym_batch(2, 16, seed=32)
+    base = ApproxEigenbasis.fit(mats, 20, n_iter=0)
+    grown = base.extend(mats, 56, n_iter=0)      # quarters of 56 miss 20
+    ns, k = grown.select_tier(num_transforms=20)
+    assert k == 20
+    x = jnp.asarray(np.random.default_rng(33).standard_normal(
+        (2, 3, 16)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(grown.apply(x, num_stages=ns)),
+        np.asarray(base.apply(x)), rtol=1e-5, atol=1e-5)
+
+
+def test_extend_reuses_the_fit_score():
+    """Regression: extend must continue the greedy with the score the
+    fit resolved (paper-score fits extend with the paper score; bit-
+    exact continuation only holds for the spectrum-free gamma score,
+    since a paper-score extension pairs by the REFIT spectrum)."""
+    mats = _sym_batch(2, 12, seed=34)
+    lam = jnp.asarray(np.linalg.eigvalsh(np.asarray(mats)))
+    base = ApproxEigenbasis.fit(mats, 12, n_iter=0, spectrum=lam)
+    assert base.info["score"] == "paper"
+    grown = base.extend(mats, 24, n_iter=0)
+    assert np.all(np.asarray(grown.objective)
+                  <= np.asarray(base.objective) * (1 + 1e-5) + 1e-5)
+    default = ApproxEigenbasis.fit(mats, 12, n_iter=0)
+    assert default.info["score"] == "gamma"

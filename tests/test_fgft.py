@@ -66,16 +66,39 @@ def test_directed_fgft():
 
 
 def test_flops_accounting():
-    a = erdos_renyi(16, seed=8)
+    """Paper Table-1 accounting for one matvec with the reconstructed
+    operator: BOTH transform legs plus the n-flop diagonal (the directed
+    path used to silently drop the + n its own docstring promised)."""
+    n = 16
+    a = erdos_renyi(n, seed=8)
     lap = laplacian(a)
     f = build_fgft(jnp.asarray(lap), 32, directed=False, n_iter=1)
-    assert f.flops_per_matvec() == 6 * 32
+    assert f.flops_per_matvec() == 12 * 32 + n
     fd = build_fgft(jnp.asarray(laplacian(directed_variant(a))), 32,
                     directed=True, n_iter=1)
     kinds = np.asarray(fd.t_factors.kind)
-    want = int((kinds == 0).sum() + 2 * (kinds == 1).sum())
+    want = int(2 * ((kinds == 0).sum() + 2 * (kinds == 1).sum()) + n)
     assert fd.flops_per_matvec() == want
-    assert fd.flops_per_matvec() <= 2 * 32  # <= 2 ops per transform
+    # <= 2 ops per transform per leg, + n diagonal
+    assert fd.flops_per_matvec() <= 2 * 2 * 32 + n
+    # anytime prefixes price only the leading components
+    assert f.flops_per_matvec(num_transforms=8) == 12 * 8 + n
+    kp = kinds[:8]
+    assert fd.flops_per_matvec(num_transforms=8) == int(
+        2 * ((kp == 0).sum() + 2 * (kp == 1).sum()) + n)
+
+
+def test_relative_error_empty_graph_is_finite():
+    """Regression: an all-zero Laplacian (empty graph) must give relative
+    error 0.0, not a NaN/inf from the unguarded ||L||_F^2 denominator."""
+    lap = laplacian(erdos_renyi(16, p=0.0, seed=0))
+    assert not lap.any()
+    f = build_fgft(jnp.asarray(lap), 16, directed=False, n_iter=1)
+    rel = relative_error(jnp.asarray(lap), f)
+    assert rel == 0.0 and np.isfinite(rel)
+    fd = build_fgft(jnp.asarray(lap), 16, directed=True, n_iter=1)
+    rel_d = relative_error(jnp.asarray(lap), fd)
+    assert rel_d == 0.0 and np.isfinite(rel_d)
 
 
 def test_directed_cheaper_than_undirected_per_transform():

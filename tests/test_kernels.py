@@ -96,3 +96,83 @@ def test_block_b_tiling_boundaries():
     got = bf.butterfly_apply(fwd, x, block_b=64, interpret=True)
     want = ref.staged_g_apply(fwd, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Anytime prefix parity (DESIGN.md §9): the Pallas kernels must match the
+# XLA oracle at EVERY exact tier boundary, for both table orientations.
+# ---------------------------------------------------------------------------
+
+
+def _tier_boundaries(staged):
+    """All exact (num_stages,) boundaries except the trivial empty cut."""
+    return [int(s) for s, k in np.asarray(staged.cuts) if k > 0]
+
+
+def test_butterfly_prefix_parity_all_tiers():
+    fwd, adj, _ = _staged_g(24, 60, seed=11)
+    x = jnp.asarray(np.random.default_rng(7).standard_normal((9, 24)),
+                    jnp.float32)
+    for s in _tier_boundaries(fwd):
+        for staged, keep in ((fwd, "tail"), (adj, "head")):
+            want = ref.staged_g_apply(staged, x, num_stages=s, keep=keep)
+            got = bf.butterfly_apply(staged, x, interpret=True,
+                                     num_stages=s, keep=keep)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_shear_prefix_parity_all_tiers():
+    fwd, inv, _ = _staged_t(20, 40, seed=12)
+    x = jnp.asarray(np.random.default_rng(8).standard_normal((6, 20)),
+                    jnp.float32)
+    for s in _tier_boundaries(fwd):
+        for staged, keep in ((fwd, "head"), (inv, "tail")):
+            want = ref.staged_t_apply(staged, x, num_stages=s, keep=keep)
+            got = sh.shear_apply(staged, x, interpret=True,
+                                 num_stages=s, keep=keep)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_fused_prefix_parity_all_tiers():
+    fwd, adj, sbar = _staged_g(16, 48, seed=13)
+    x = jnp.asarray(np.random.default_rng(9).standard_normal((5, 16)),
+                    jnp.float32)
+    for s in _tier_boundaries(fwd):
+        want = ref.sym_operator_apply(fwd, adj, sbar, x, num_stages=s)
+        got = bf.sym_operator_apply(fwd, adj, sbar, x, interpret=True,
+                                    num_stages=s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    tfwd, tinv, cbar = _staged_t(16, 48, seed=14)
+    for s in _tier_boundaries(tfwd):
+        want = ref.gen_operator_apply(tfwd, tinv, cbar, x, num_stages=s)
+        got = sh.gen_operator_apply(tfwd, tinv, cbar, x, interpret=True,
+                                    num_stages=s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_ops_prefix_backend_parity_and_bank():
+    """ops-level switch: xla and pallas agree at a mid-ladder boundary for
+    the plain, fused and filter-bank paths."""
+    from repro.core.staging import select_cut
+    fwd, adj, sbar = _staged_g(16, 32, seed=15)
+    s, _ = select_cut(fwd, fraction=0.5)
+    x = jnp.asarray(np.random.default_rng(10).standard_normal((2, 3, 16)),
+                    jnp.float32)
+    y_x = ops.g_apply(fwd, x, backend="xla", num_stages=s, keep="tail")
+    y_p = ops.g_apply(fwd, x, backend="pallas", num_stages=s, keep="tail")
+    np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p), atol=1e-6)
+    o_x = ops.sym_operator(fwd, adj, sbar, x, backend="xla", num_stages=s)
+    o_p = ops.sym_operator(fwd, adj, sbar, x, backend="pallas",
+                           num_stages=s)
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p), atol=1e-5)
+    gains = jnp.asarray(np.random.default_rng(11).standard_normal(
+        (3, 16)), jnp.float32)
+    b_x = ops.sym_filter_bank(fwd, adj, gains, x[0], backend="xla",
+                              num_stages=s)
+    b_p = ops.sym_filter_bank(fwd, adj, gains, x[0], backend="pallas",
+                              num_stages=s)
+    np.testing.assert_allclose(np.asarray(b_x), np.asarray(b_p), atol=1e-5)

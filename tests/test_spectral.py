@@ -254,3 +254,20 @@ def test_serve_filter_mode_smoke(capsys):
     assert out["responses_per_s"] > 0
     assert out["filters"] == ["heat", "scaling", "wavelet0", "wavelet1"]
     assert "fused bank path" in capsys.readouterr().out
+
+
+def test_retained_energy_zero_rows_regression(sym_batched):
+    """Regression: all-zero signal rows (and signals on an empty graph's
+    null spectrum) must report retained energy 1.0, never NaN/inf from
+    the energy-denominator division."""
+    _, basis = sym_batched
+    x = _signals((3, 4, N), seed=40)
+    x = x.at[:, 0].set(0.0)                       # zero rows in each graph
+    out = sp.compress(basis, x, k=4)
+    e = np.asarray(out.retained_energy)
+    assert np.all(np.isfinite(e))
+    np.testing.assert_allclose(e[:, 0], 1.0)
+    assert np.all((e >= 0.0) & (e <= 1.0 + 1e-6))
+    # compression_error on the same rows is 0/eps-guarded, not NaN
+    err = np.asarray(sp.compression_error(basis, x, k=4))
+    assert np.all(np.isfinite(err)) and np.all(err[:, 0] == 0.0)
