@@ -9,7 +9,7 @@ from .staging import (StagedG, StagedT, default_cut_ladder, pack_g,
                       pack_g_pair, pack_t, pack_t_batch, pack_t_batch_pair,
                       pack_t_inverse, pack_t_pair, select_cut,
                       truncate_staged)
-from .eigenbasis import ApproxEigenbasis
+from .eigenbasis import ApproxEigenbasis, pad_ragged
 from .fgft import (FGFT, build_fgft, laplacian, prefix_relative_error,
                    relative_error)
 from .baselines import (truncated_jacobi, factorize_orthonormal,

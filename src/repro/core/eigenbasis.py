@@ -50,46 +50,74 @@ GENERAL = "general"
 
 @functools.lru_cache(maxsize=None)
 def _sym_fit_program(g: int, n_iter: int, update_spectrum: bool,
-                     eps: float, score: str, batched: bool):
-    def one(s_mat, sbar0):
-        return gt._approx_sym_core(
-            s_mat, sbar0, g, n_iter, update_spectrum,
-            jnp.asarray(eps, s_mat.dtype), score)
+                     eps: float, score: str, batched: bool,
+                     masked: bool = False):
+    if masked:
+        def one(s_mat, sbar0, size):
+            return gt._approx_sym_core(
+                s_mat, sbar0, g, n_iter, update_spectrum,
+                jnp.asarray(eps, s_mat.dtype), score, size)
+    else:
+        def one(s_mat, sbar0):
+            return gt._approx_sym_core(
+                s_mat, sbar0, g, n_iter, update_spectrum,
+                jnp.asarray(eps, s_mat.dtype), score)
 
     return jax.jit(jax.vmap(one) if batched else one)
 
 
 @functools.lru_cache(maxsize=None)
 def _gen_fit_program(m: int, n_iter: int, update_spectrum: bool,
-                     eps: float, batched: bool):
-    def one(c_mat, cbar0):
-        return tt._approx_gen_core(
-            c_mat, cbar0, m, n_iter, update_spectrum,
-            jnp.asarray(eps, c_mat.dtype))
+                     eps: float, batched: bool, masked: bool = False):
+    if masked:
+        def one(c_mat, cbar0, size):
+            return tt._approx_gen_core(
+                c_mat, cbar0, m, n_iter, update_spectrum,
+                jnp.asarray(eps, c_mat.dtype), size)
+    else:
+        def one(c_mat, cbar0):
+            return tt._approx_gen_core(
+                c_mat, cbar0, m, n_iter, update_spectrum,
+                jnp.asarray(eps, c_mat.dtype))
 
     return jax.jit(jax.vmap(one) if batched else one)
 
 
 @functools.lru_cache(maxsize=None)
 def _sym_extend_program(g_extra: int, n_iter: int, update_spectrum: bool,
-                        eps: float, score: str, batched: bool):
+                        eps: float, score: str, batched: bool,
+                        masked: bool = False):
     """Warm-start extension program, cached like the fit programs: one
     compile per (g_extra, hyperparam) combo serves every batch."""
-    def one(s_mat, fi, fj, fc, fs, fsg, sbar):
-        return gt._extend_sym_core(
-            s_mat, GFactors(fi, fj, fc, fs, fsg), sbar, g_extra, n_iter,
-            update_spectrum, jnp.asarray(eps, s_mat.dtype), score)
+    if masked:
+        def one(s_mat, fi, fj, fc, fs, fsg, sbar, size):
+            return gt._extend_sym_core(
+                s_mat, GFactors(fi, fj, fc, fs, fsg), sbar, g_extra,
+                n_iter, update_spectrum, jnp.asarray(eps, s_mat.dtype),
+                score, size)
+    else:
+        def one(s_mat, fi, fj, fc, fs, fsg, sbar):
+            return gt._extend_sym_core(
+                s_mat, GFactors(fi, fj, fc, fs, fsg), sbar, g_extra,
+                n_iter, update_spectrum, jnp.asarray(eps, s_mat.dtype),
+                score)
 
     return jax.jit(jax.vmap(one) if batched else one)
 
 
 @functools.lru_cache(maxsize=None)
 def _gen_extend_program(m_extra: int, n_iter: int, update_spectrum: bool,
-                        eps: float, batched: bool):
-    def one(c_mat, fk, fi, fj, fa, cbar):
-        return tt._extend_gen_core(
-            c_mat, TFactors(fk, fi, fj, fa), cbar, m_extra, n_iter,
-            update_spectrum, jnp.asarray(eps, c_mat.dtype))
+                        eps: float, batched: bool, masked: bool = False):
+    if masked:
+        def one(c_mat, fk, fi, fj, fa, cbar, size):
+            return tt._extend_gen_core(
+                c_mat, TFactors(fk, fi, fj, fa), cbar, m_extra, n_iter,
+                update_spectrum, jnp.asarray(eps, c_mat.dtype), size)
+    else:
+        def one(c_mat, fk, fi, fj, fa, cbar):
+            return tt._extend_gen_core(
+                c_mat, TFactors(fk, fi, fj, fa), cbar, m_extra, n_iter,
+                update_spectrum, jnp.asarray(eps, c_mat.dtype))
 
     return jax.jit(jax.vmap(one) if batched else one)
 
@@ -98,6 +126,77 @@ def _is_symmetric(mats: jnp.ndarray) -> bool:
     # on-device reduction: only one scalar crosses to the host (the batch
     # may be large and already device-resident)
     return bool(jnp.allclose(mats, jnp.swapaxes(mats, -1, -2), atol=1e-6))
+
+
+def pad_ragged(mats, width: Optional[int] = None
+               ) -> tuple[jnp.ndarray, np.ndarray]:
+    """Zero-pad a heterogeneous fleet of square matrices into one bucket.
+
+    ``mats``: a sequence of (n_b, n_b) arrays (sizes may differ).  Returns
+    ``(stack, sizes)`` with ``stack`` a (B, n, n) f32 stack (``n`` =
+    ``width`` or the largest size) and ``sizes`` the (B,) true sides.
+    The zero pad block is exactly representable: a masked fit
+    (``ApproxEigenbasis.fit(..., sizes=sizes)``) acts as the identity on
+    coordinates >= n_b, so each matrix factors as its own-size fit would
+    (DESIGN.md §10)."""
+    arrs = [np.asarray(m, np.float32) for m in mats]
+    for a in arrs:
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"ragged fleet entries must be square "
+                             f"matrices, got shape {a.shape}")
+    if not arrs:
+        raise ValueError("empty ragged fleet")
+    sizes = np.asarray([a.shape[0] for a in arrs], np.int64)
+    n = int(width) if width is not None else int(sizes.max())
+    if n < int(sizes.max()):
+        raise ValueError(f"bucket width {n} < largest matrix "
+                         f"{int(sizes.max())}")
+    out = np.zeros((len(arrs), n, n), np.float32)
+    for b, a in enumerate(arrs):
+        out[b, :a.shape[0], :a.shape[0]] = a
+    return jnp.asarray(out), sizes
+
+
+def _zero_pad_block(mats: jnp.ndarray, sizes) -> jnp.ndarray:
+    """Enforce the ragged-embedding precondition: coordinates >= the true
+    size are zeroed.  The masked greedy never SELECTS a pad pair either
+    way, but the polish/Lemma value refits and the reported objective
+    integrate whole rows/cols — a caller-padded stack with garbage in the
+    pad block would silently corrupt them, so the contract is enforced
+    rather than assumed."""
+    if sizes is None:
+        return mats
+    n = mats.shape[-1]
+    valid = jnp.arange(n) < jnp.asarray(np.asarray(sizes))[..., None]
+    return jnp.where(
+        jnp.logical_and(valid[..., :, None], valid[..., None, :]),
+        mats, 0.0)
+
+
+def _normalize_sizes(sizes, batched: bool, n: int, batch: int):
+    """Validate/canonicalize a ``sizes`` argument.
+
+    Returns host metadata: an (B,) int64 array for a batched fit, an int
+    for an unbatched one — or None when every matrix fills the bucket
+    (the unmasked programs are strictly cheaper)."""
+    if sizes is None:
+        return None
+    sizes = np.asarray(sizes)
+    if batched:
+        if sizes.shape != (batch,):
+            raise ValueError(f"sizes must be ({batch},) to match the "
+                             f"matrix batch, got {sizes.shape}")
+        sizes = sizes.astype(np.int64)
+    else:
+        if sizes.ndim != 0:
+            raise ValueError(f"unbatched fit takes a scalar size, got "
+                             f"shape {sizes.shape}")
+        sizes = np.int64(sizes)
+    if np.any(sizes < 2) or np.any(sizes > n):
+        raise ValueError(f"sizes must lie in [2, {n}], got {sizes}")
+    if np.all(sizes == n):
+        return None
+    return int(sizes) if not batched else sizes
 
 
 @dataclass
@@ -115,6 +214,11 @@ class ApproxEigenbasis:
       bwd: staged Ubar^T / Tbar^{-1} tables, same layout.
       objective: final ||M - reconstruction||_F^2, scalar or (B,).
       info: fit diagnostics (objective history, iteration counts).
+      sizes: true matrix sides for a ragged (masked) fit — (B,) int64 host
+        array / int, or None when every matrix fills the bucket.  A masked
+        basis acts as the identity on coordinates >= sizes[b] (DESIGN.md
+        §10): ``apply`` passes those signal coordinates through untouched
+        and ``project`` zeroes them (the padded spectrum is zero).
     """
 
     kind: str
@@ -126,16 +230,18 @@ class ApproxEigenbasis:
     bwd: Union[StagedG, StagedT]
     objective: Optional[jnp.ndarray] = None
     info: Dict[str, Any] = field(default_factory=dict)
+    sizes: Optional[Any] = None
 
     # -- fitting -----------------------------------------------------------
 
     @classmethod
-    def fit(cls, mats: jnp.ndarray, num_transforms: int, *,
+    def fit(cls, mats, num_transforms: int, *,
             kind: str = "auto", hint: Optional[str] = None,
             n_iter: int = 8, eps: float = 1e-3,
             update_spectrum: bool = True,
             spectrum: Optional[jnp.ndarray] = None,
             score: Optional[str] = None,
+            sizes=None,
             mesh: Optional[Any] = None) -> "ApproxEigenbasis":
         """Factor one matrix (n, n) or a batch (B, n, n) — Algorithm 1.
 
@@ -146,15 +252,30 @@ class ApproxEigenbasis:
         against the mesh's data axes first, so the same program runs SPMD
         across devices (DESIGN.md §7).
 
+        Heterogeneous fleets (DESIGN.md §10): ``mats`` may be a LIST of
+        square matrices with different sides — they are zero-padded into
+        one (B, n, n) bucket (``pad_ragged``) and fitted with the greedy
+        masked to each matrix's true coordinates, so every factor chain
+        acts as the identity on its padding block and the per-matrix
+        result matches the matrix's own-size fit.  Alternatively pass an
+        already-padded stack plus ``sizes`` ((B,) true sides; the pad
+        block must be zero).
+
         ``kind="auto"`` picks "sym" when the input is (numerically)
         symmetric; pass ``kind="sym"``/``"general"`` to force a family, or
         ``hint`` to keep auto-detection but get a warning when it resolves
         against the caller's expectation (e.g. a directed graph whose
         Laplacian happens to be numerically symmetric would silently route
         through the G path).  ``score``/``spectrum`` have the same meaning
-        as in ``approximate_symmetric`` (ignored score for the general
-        case).
+        as in ``approximate_symmetric``; ``score`` applies to the
+        symmetric family only and is rejected (not silently dropped) for
+        a general-family fit.
         """
+        if isinstance(mats, (list, tuple)):
+            if sizes is not None:
+                raise ValueError("pass sizes= only with a pre-padded "
+                                 "stack; a ragged list derives its own")
+            mats, sizes = pad_ragged(mats)
         mats = jnp.asarray(mats, jnp.float32)
         if mats.ndim not in (2, 3):
             raise ValueError(f"expected (n, n) or (B, n, n), got {mats.shape}")
@@ -162,6 +283,9 @@ class ApproxEigenbasis:
         n = mats.shape[-1]
         if mats.shape[-2] != n:
             raise ValueError(f"matrices must be square, got {mats.shape}")
+        sizes = _normalize_sizes(sizes, batched, n,
+                                 mats.shape[0] if batched else 0)
+        mats = _zero_pad_block(mats, sizes)
         if hint not in (None, SYMMETRIC, GENERAL):
             raise ValueError(f"unknown hint {hint!r}; expected "
                              f"{SYMMETRIC!r} or {GENERAL!r}")
@@ -172,6 +296,18 @@ class ApproxEigenbasis:
                     f"kind='auto' resolved to {kind!r}, overriding the "
                     f"caller hint {hint!r}; pass kind={hint!r} to force "
                     "that factorization family", stacklevel=2)
+        if kind == GENERAL and score is not None:
+            raise ValueError(
+                f"score={score!r} applies to the symmetric (G-transform) "
+                "family only; the general (T-transform) greedy has no "
+                "score variant — drop the argument or force kind='sym'")
+        if spectrum is not None:
+            spectrum = jnp.asarray(spectrum, jnp.float32)
+            want = mats.shape[:-2] + (n,)
+            if spectrum.shape != want:
+                raise ValueError(
+                    f"spectrum shape {spectrum.shape} does not match the "
+                    f"fitted batch: expected {want}")
         if mesh is not None and batched:
             # unbatched (n, n) input has no batch axis to spread — only a
             # (B, n, n) stack shards; awkward B falls back to replication
@@ -179,36 +315,41 @@ class ApproxEigenbasis:
             mats = jax.device_put(
                 mats, matrix_batch_sharding(mesh, mats.ndim,
                                             batch=mats.shape[0]))
+        masked = sizes is not None
+        size_arg = (jnp.asarray(sizes, jnp.int32),) if masked else ()
 
         if kind == SYMMETRIC:
             if score is None:
                 score = "paper" if spectrum is not None else "gamma"
-            sbar0 = (jnp.asarray(spectrum, jnp.float32)
-                     if spectrum is not None else gt.default_sbar(mats))
+            sbar0 = (spectrum if spectrum is not None
+                     else gt.default_sbar(mats, sizes))
             fit_fn = _sym_fit_program(num_transforms, n_iter,
                                       update_spectrum, float(eps), score,
-                                      batched)
-            factors, sbar, obj, hist, iters = fit_fn(mats, sbar0)
+                                      batched, masked)
+            factors, sbar, obj, hist, iters = fit_fn(mats, sbar0, *size_arg)
             fwd, bwd = (pack_g_batch_pair(factors, n) if batched
-                        else pack_g_pair(factors))
+                        else pack_g_pair(factors, n=n))
             return cls(kind=SYMMETRIC, n=n, batched=batched,
                        factors=factors, spectrum=sbar, fwd=fwd, bwd=bwd,
                        objective=obj,
                        info={"history": hist, "iterations": iters,
-                             "score": score})
+                             "score": score},
+                       sizes=sizes)
 
         if kind == GENERAL:
-            cbar0 = (jnp.asarray(spectrum, jnp.float32)
-                     if spectrum is not None else tt.default_cbar(mats))
+            cbar0 = (spectrum if spectrum is not None
+                     else tt.default_cbar(mats, sizes))
             fit_fn = _gen_fit_program(num_transforms, n_iter,
-                                      update_spectrum, float(eps), batched)
-            factors, cbar, obj, hist, iters = fit_fn(mats, cbar0)
+                                      update_spectrum, float(eps), batched,
+                                      masked)
+            factors, cbar, obj, hist, iters = fit_fn(mats, cbar0, *size_arg)
             fwd, bwd = (pack_t_batch_pair(factors, n) if batched
                         else pack_t_pair(factors, n))
             return cls(kind=GENERAL, n=n, batched=batched,
                        factors=factors, spectrum=cbar, fwd=fwd, bwd=bwd,
                        objective=obj,
-                       info={"history": hist, "iterations": iters})
+                       info={"history": hist, "iterations": iters},
+                       sizes=sizes)
 
         raise ValueError(f"unknown kind {kind!r}")
 
@@ -246,12 +387,14 @@ class ApproxEigenbasis:
         with the usual polish/Lemma refinement.
 
         ``mats``: the same (n, n) / (B, n, n) stack this basis was fitted
-        to (the basis stores factors, not matrices).  Batched fits extend
-        under one jit(vmap) program, cached like the fit programs.  The
-        extended tables' cut ladder includes the ORIGINAL g, so the
-        pre-extension basis remains selectable as a serving tier.
-        ``score`` defaults to the score the fit resolved (recorded in
-        ``info``; "gamma" for a restored basis, which drops ``info``)."""
+        to (the basis stores factors, not matrices; a ragged fit extends
+        against the same zero-padded bucket stack and keeps its masking).
+        Batched fits extend under one jit(vmap) program, cached like the
+        fit programs.  The extended tables' cut ladder includes the
+        ORIGINAL g, so the pre-extension basis remains selectable as a
+        serving tier.  ``score`` defaults to the score the fit resolved
+        (recorded in ``info`` and restored by ``load``); like ``fit`` it
+        is rejected for the general family."""
         mats = jnp.asarray(mats, jnp.float32)
         if mats.ndim != (3 if self.batched else 2):
             raise ValueError(f"expected {'batched ' if self.batched else ''}"
@@ -259,6 +402,10 @@ class ApproxEigenbasis:
         if mats.shape[-1] != self.n or mats.shape[-2] != self.n:
             raise ValueError(f"matrix side {mats.shape[-1]} != fitted "
                              f"n={self.n}")
+        if self.kind != SYMMETRIC and score is not None:
+            raise ValueError(
+                f"score={score!r} applies to the symmetric (G-transform) "
+                "family only; this basis is kind='general'")
         g_old = self.num_transforms
         extra = num_transforms - g_old
         if extra <= 0:
@@ -270,6 +417,9 @@ class ApproxEigenbasis:
             mats = jax.device_put(
                 mats, matrix_batch_sharding(mesh, mats.ndim,
                                             batch=mats.shape[0]))
+        masked = self.sizes is not None
+        mats = _zero_pad_block(mats, self.sizes)
+        size_arg = (jnp.asarray(self.sizes, jnp.int32),) if masked else ()
         # keep the pre-extension basis selectable as a tier: the new
         # ladder carries the original g as an extra exact cut
         cuts = sorted(set(default_cut_ladder(num_transforms).tolist())
@@ -280,24 +430,25 @@ class ApproxEigenbasis:
                 score = self.info.get("score", "gamma")
             info["score"] = score  # chained extends keep the criterion
             fit_fn = _sym_extend_program(extra, n_iter, update_spectrum,
-                                         float(eps), score, self.batched)
+                                         float(eps), score, self.batched,
+                                         masked)
             factors, sbar, obj, hist, iters = fit_fn(
-                mats, *self.factors, self.spectrum)
+                mats, *self.factors, self.spectrum, *size_arg)
             fwd, bwd = (pack_g_batch_pair(factors, n, cuts=cuts)
                         if self.batched
-                        else pack_g_pair(factors, cuts=cuts))
+                        else pack_g_pair(factors, cuts=cuts, n=n))
         else:
             fit_fn = _gen_extend_program(extra, n_iter, update_spectrum,
-                                         float(eps), self.batched)
+                                         float(eps), self.batched, masked)
             factors, sbar, obj, hist, iters = fit_fn(
-                mats, *self.factors, self.spectrum)
+                mats, *self.factors, self.spectrum, *size_arg)
             fwd, bwd = (pack_t_batch_pair(factors, n, cuts=cuts)
                         if self.batched
                         else pack_t_pair(factors, n, cuts=cuts))
         info.update(history=hist, iterations=iters)
         return type(self)(kind=self.kind, n=n, batched=self.batched,
                           factors=factors, spectrum=sbar, fwd=fwd, bwd=bwd,
-                          objective=obj, info=info)
+                          objective=obj, info=info, sizes=self.sizes)
 
     # -- application -------------------------------------------------------
 
@@ -339,9 +490,17 @@ class ApproxEigenbasis:
         ``backend="pallas"`` runs the fused one-round-trip kernel; batched
         instances use the (B, S, P)-table batched kernels (DESIGN.md §4,
         §7).  ``num_stages`` truncates both transform legs to the same
-        anytime component prefix (DESIGN.md §9)."""
+        anytime component prefix (DESIGN.md §9).  On a ragged basis the
+        gains are zeroed at each matrix's padding coordinates — the padded
+        spectrum slots are 0 but ``h(0)`` need not be (heat/Tikhonov map
+        0 -> 1), and the transforms pass pad coordinates through, so an
+        unmasked ``h`` would leak pad columns of ``x`` into the output."""
         kops = self._ops()
         d = self.spectrum if h is None else h(self.spectrum)
+        if h is not None and self.sizes is not None:
+            valid = (np.arange(self.n)
+                     < np.asarray(self.sizes)[..., None])
+            d = jnp.where(jnp.asarray(valid), d, 0.0)
         if self.kind == SYMMETRIC:
             fn = (kops.batched_sym_operator if self.batched
                   else kops.sym_operator)
@@ -421,6 +580,17 @@ class ApproxEigenbasis:
                 "num_stages": int(self.fwd.num_stages),
                 "stage_cuts": (np.asarray(self.fwd.cuts).tolist()
                                if self.fwd.cuts is not None else None),
+                # the fit's resolved greedy criterion and final objective:
+                # without these a restored basis would EXTEND under the
+                # default "gamma" score even when the fit used "paper",
+                # silently switching the greedy mid-chain
+                "score": self.info.get("score"),
+                "objective": (np.asarray(self.objective,
+                                         np.float64).tolist()
+                              if self.objective is not None else None),
+                # ragged-fleet masking (DESIGN.md §10)
+                "sizes": (np.asarray(self.sizes).tolist()
+                          if self.sizes is not None else None),
             }
         }
         return save_checkpoint(directory, step, state, metadata=meta)
@@ -461,7 +631,7 @@ class ApproxEigenbasis:
         factors, spectrum = state["factors"], state["spectrum"]
         if kind == SYMMETRIC:
             fwd, bwd = (pack_g_batch_pair(factors, n) if batched
-                        else pack_g_pair(factors))
+                        else pack_g_pair(factors, n=n))
         else:
             fwd, bwd = (pack_t_batch_pair(factors, n) if batched
                         else pack_t_pair(factors, n))
@@ -473,5 +643,19 @@ class ApproxEigenbasis:
                 "cut ladder than the checkpoint recorded (packing defaults "
                 "changed?); serving tiers pinned to the old ladder's stage "
                 "counts must be re-selected via select_tier", stacklevel=2)
+        # restore the fit's resolved scoring criterion + objective so a
+        # post-restore extend() keeps the original greedy criterion
+        # (pre-fix checkpoints carry neither key -> .get defaults)
+        info: Dict[str, Any] = {}
+        if meta.get("score") is not None:
+            info["score"] = meta["score"]
+        objective = None
+        if meta.get("objective") is not None:
+            objective = jnp.asarray(meta["objective"], jnp.float32)
+        sizes = meta.get("sizes")
+        if sizes is not None:
+            sizes = (np.asarray(sizes, np.int64) if batched
+                     else int(sizes))
         return cls(kind=kind, n=n, batched=batched, factors=factors,
-                   spectrum=spectrum, fwd=fwd, bwd=bwd)
+                   spectrum=spectrum, fwd=fwd, bwd=bwd,
+                   objective=objective, info=info, sizes=sizes)

@@ -19,7 +19,7 @@ import numpy as np
 
 from . import gtransform as gt
 from . import ttransform as tt
-from .staging import StagedG, StagedT, pack_g_pair, pack_t_pair
+from .staging import StagedG, StagedT, pack_g_pair, pack_t_pair, select_cut
 from .types import GFactors, TFactors
 from repro.kernels import ops as kops
 
@@ -104,6 +104,19 @@ class FGFT:
         """(C, 2) array of exact (num_stages, num_components) prefix
         boundaries of the staged tables (core/staging.py)."""
         return self.fwd.cuts
+
+    def select_tier(self, fraction: Optional[float] = None,
+                    num_transforms: Optional[int] = None
+                    ) -> tuple[int, int]:
+        """Pick the exact stage cut nearest a component target — API
+        parity with ``ApproxEigenbasis.select_tier``.  Returns
+        ``(num_stages, num_components)``; the ``num_stages`` feeds
+        straight into ``analysis``/``synthesis``/``filter``, which apply
+        the family's head/tail cut orientation themselves (callers no
+        longer hand-roll ``staging.select_cut`` plus the orientation
+        rules)."""
+        return select_cut(self.fwd, num_transforms=num_transforms,
+                          fraction=fraction)
 
     def prefix_transforms(self, num_transforms: int):
         """The leading ``num_transforms`` fundamental components as a

@@ -122,7 +122,8 @@ def _conjugate_g(m, i, j, c, s, sigma):
 # Theorem 1: greedy initialization
 # ---------------------------------------------------------------------------
 
-def _pair_gains_rows(diag_s, s_row, sbar, idx, score: str = "paper"):
+def _pair_gains_rows(diag_s, s_row, sbar, idx, score: str = "paper",
+                     valid=None):
     """Gain of pairing index ``idx`` with every other index (vectorized).
 
     score="paper": the exact Theorem-1 score in rearrangement-max form —
@@ -136,6 +137,10 @@ def _pair_gains_rows(diag_s, s_row, sbar, idx, score: str = "paper"):
     with the extended (rotation+reflection) blocks.  The right choice when
     the sbar estimate is unreliable (e.g. a Laplacian's diagonal, full of
     repeated degrees, zeroes most eq.-15 gains).
+
+    ``valid`` ((n,) bool, optional) marks real coordinates of a ragged
+    matrix embedded in a wider bucket; pairs touching a padding coordinate
+    score -inf so the greedy can never select them (DESIGN.md §10).
     """
     a_i = diag_s[idx]
     delta = a_i - diag_s
@@ -149,10 +154,12 @@ def _pair_gains_rows(diag_s, s_row, sbar, idx, score: str = "paper"):
         si = sbar[idx]
         base = si * a_i + sbar * diag_s
         gain = jnp.maximum(si * d1 + sbar * d2, si * d2 + sbar * d1) - base
+    if valid is not None:
+        gain = jnp.where(jnp.logical_and(valid, valid[idx]), gain, _NEG_INF)
     return gain.at[idx].set(_NEG_INF)
 
 
-def _gain_matrix(s_work, sbar, score: str = "paper"):
+def _gain_matrix(s_work, sbar, score: str = "paper", valid=None):
     n = s_work.shape[0]
     a = jnp.diag(s_work)
     ai, aj = a[:, None], a[None, :]
@@ -166,6 +173,9 @@ def _gain_matrix(s_work, sbar, score: str = "paper"):
         si, sj = sbar[:, None], sbar[None, :]
         base = si * ai + sj * aj
         gain = jnp.maximum(si * d1 + sj * d2, si * d2 + sj * d1) - base
+    if valid is not None:
+        gain = jnp.where(
+            jnp.logical_and(valid[:, None], valid[None, :]), gain, _NEG_INF)
     return jnp.where(jnp.eye(n, dtype=bool), _NEG_INF, gain)
 
 
@@ -190,19 +200,23 @@ def _procrustes_2x2(s_ii, s_jj, s_ij, sbar_i, sbar_j):
 
 
 def g_init(s_mat: jnp.ndarray, sbar: jnp.ndarray, g: int,
-           score: str = "paper") -> Tuple[GFactors, jnp.ndarray]:
+           score: str = "paper", valid=None
+           ) -> Tuple[GFactors, jnp.ndarray]:
     """Theorem-1 greedy initialization of ``g`` G-transforms.
 
     ``score`` selects the pair score: "paper" (eq. 15, uses sbar) or
-    "gamma" (Remark 1, eigenvalue-free).  Returns factors (application
-    order) and the final working matrix ``W = Ubar^T S Ubar`` (whose
-    diagonal is the Lemma-1 spectrum).
+    "gamma" (Remark 1, eigenvalue-free).  ``valid`` ((n,) bool) restricts
+    the greedy to real coordinates of a ragged matrix embedded in a wider
+    bucket — no selected pair ever touches a padding coordinate, so the
+    fitted chain acts as the identity on coordinates >= the true size.
+    Returns factors (application order) and the final working matrix
+    ``W = Ubar^T S Ubar`` (whose diagonal is the Lemma-1 spectrum).
     """
     n = s_mat.shape[0]
     dtype = s_mat.dtype
     sbar = sbar.astype(dtype)
     factors0 = gfactors_identity(g, dtype)
-    gains0 = _gain_matrix(s_mat, sbar, score)
+    gains0 = _gain_matrix(s_mat, sbar, score, valid)
 
     def body(t, carry):
         s_work, gains, fi, fj, fc, fs, fsg = carry
@@ -220,9 +234,9 @@ def g_init(s_mat: jnp.ndarray, sbar: jnp.ndarray, g: int,
         s_work = _conjugate_gt(s_work, i, j, c, s, sigma)
         # refresh the O(n) affected scores (rows/cols i and j)
         diag_s = jnp.diagonal(s_work)
-        gi = _pair_gains_rows(diag_s, s_work[i], sbar, i, score)
+        gi = _pair_gains_rows(diag_s, s_work[i], sbar, i, score, valid)
         gains = gains.at[i].set(gi).at[:, i].set(gi)
-        gj = _pair_gains_rows(diag_s, s_work[j], sbar, j, score)
+        gj = _pair_gains_rows(diag_s, s_work[j], sbar, j, score, valid)
         gains = gains.at[j].set(gj).at[:, j].set(gj)
         gains = gains.at[j, i].set(gj[i]).at[i, j].set(gj[i])
         # store in application order: discovery t corresponds to slot g-1-t
@@ -426,21 +440,35 @@ def _sym_iterate(s_mat, factors, sbar, n_iter, update_spectrum, eps):
     return factors, sbar, obj, hist, it
 
 
-def _approx_sym_core(s_mat, sbar0, g, n_iter, update_spectrum, eps, score):
+def _valid_coords(s_mat, size):
+    """(n,) bool mask of real coordinates for a ragged matrix embedded in
+    an n-wide bucket (None when the matrix fills the bucket)."""
+    if size is None:
+        return None
+    return jnp.arange(s_mat.shape[-1]) < size
+
+
+def _approx_sym_core(s_mat, sbar0, g, n_iter, update_spectrum, eps, score,
+                     size=None):
     """Traceable Algorithm-1 body (init + polish/spectrum sweeps).
 
     Kept jit-free so callers can compose it: ``approximate_symmetric`` jits
     it directly; the batched engine (core/eigenbasis.py) wraps it in
     ``jit(vmap(...))`` to run Algorithm 1 for a whole stack of matrices in
-    one program (DESIGN.md §7).
+    one program (DESIGN.md §7).  ``size`` (scalar, may be traced/vmapped)
+    masks the greedy to the leading ``size`` coordinates so a ragged
+    matrix zero-padded into the bucket fits exactly as its own-size fit
+    would: padding rows/cols are zero, so every polish/Lemma-1 sweep is
+    automatically confined to the valid block once the init never selects
+    a padding pair (DESIGN.md §10).
     """
-    factors, w = g_init(s_mat, sbar0, g, score)
+    factors, w = g_init(s_mat, sbar0, g, score, _valid_coords(s_mat, size))
     sbar = jnp.where(update_spectrum, jnp.diagonal(w), sbar0)
     return _sym_iterate(s_mat, factors, sbar, n_iter, update_spectrum, eps)
 
 
 def _extend_sym_core(s_mat, factors0, sbar0, g_extra, n_iter,
-                     update_spectrum, eps, score):
+                     update_spectrum, eps, score, size=None):
     """Warm-start extension: append ``g_extra`` Theorem-1 components
     fitted against the current residual (DESIGN.md §9).
 
@@ -450,9 +478,10 @@ def _extend_sym_core(s_mat, factors0, sbar0, g_extra, n_iter,
     (core/types.py) the new factors are therefore PREPENDED: Ubar_ext =
     Ubar0 · Unew.  ``n_iter`` > 0 re-sweeps the whole extended chain
     (fitted prefix included) with the usual polish/Lemma-1 loop.
+    ``size`` masks the appended greedy like ``_approx_sym_core``.
     """
     w = g_conjugated(s_mat, factors0)
-    new, w2 = g_init(w, sbar0, g_extra, score)
+    new, w2 = g_init(w, sbar0, g_extra, score, _valid_coords(s_mat, size))
     factors = GFactors(*(jnp.concatenate([nf, of])
                          for nf, of in zip(new, factors0)))
     sbar = jnp.where(update_spectrum, jnp.diagonal(w2), sbar0)
@@ -463,16 +492,38 @@ _approx_sym_jit = functools.partial(jax.jit, static_argnames=(
     "g", "n_iter", "update_spectrum", "score"))(_approx_sym_core)
 
 
-def default_sbar(s_mat: jnp.ndarray) -> jnp.ndarray:
+def _masked_default_spectrum(diag: jnp.ndarray, sizes,
+                             dtype) -> jnp.ndarray:
+    """diag + deterministic tie-break for ragged matrices embedded in an
+    n-wide bucket: statistics (std) and the perturbation ramp use the TRUE
+    size of each matrix, so the estimate matches what the matrix's own-size
+    fit would start from; padding coordinates are exactly zero."""
+    n = diag.shape[-1]
+    size = jnp.asarray(sizes, dtype)[..., None]
+    valid = jnp.arange(n) < size
+    d = jnp.where(valid, diag, 0.0)
+    mean = jnp.sum(d, axis=-1, keepdims=True) / size
+    var = jnp.sum(jnp.where(valid, (d - mean) ** 2, 0.0),
+                  axis=-1, keepdims=True) / size
+    scale = jnp.maximum(jnp.sqrt(var), 1e-6)
+    pert = 1e-6 * scale * jnp.arange(n, dtype=dtype) / size
+    return jnp.where(valid, d + pert, 0.0)
+
+
+def default_sbar(s_mat: jnp.ndarray, sizes=None) -> jnp.ndarray:
     """Default spectrum estimate: diag(S) with a deterministic tie-break.
 
     The paper requires distinct estimated eigenvalues; the tiny monotone
     perturbation keeps pairs with equal diagonal entries selectable.  Works
     on a single (n, n) matrix or on any leading-batched (..., n, n) stack
     (used by the batched engine so batched and single fits see bit-identical
-    starting spectra)."""
+    starting spectra).  ``sizes`` (scalar or (...,) to match the batch)
+    marks ragged matrices embedded in the n-wide bucket: statistics follow
+    each matrix's true size and padding coordinates get exactly zero."""
     n = s_mat.shape[-1]
     sbar = jnp.diagonal(s_mat, axis1=-2, axis2=-1)
+    if sizes is not None:
+        return _masked_default_spectrum(sbar, sizes, s_mat.dtype)
     scale = jnp.maximum(jnp.std(sbar, axis=-1, keepdims=True), 1e-6)
     return sbar + 1e-6 * scale * jnp.arange(n, dtype=s_mat.dtype) / n
 

@@ -34,6 +34,16 @@ cuts of both directions:
     stages sit at the HEAD of the forward tables and the TAIL of the
     inverse tables.
 
+Ragged embedding (DESIGN.md §10).  Padding entries carry the
+OUT-OF-BOUNDS index ``n`` (see ``_pad_layout``), which is also what makes
+heterogeneous fleets work: an n'-node matrix fitted inside an n-wide
+bucket (masked greedy, core/eigenbasis.py) produces factors that touch
+only coordinates < n', so its staged tables act as the identity on
+coordinates >= n' — the same structural no-op mechanism, just wider.
+Pass the bucket width explicitly (``pack_g(..., n=...)`` / ``pack_t(...,
+n)``) so the tables — and their pad index — match the bucket, not the
+chain's own coordinate range.
+
 Packing happens on the host (numpy, once per factorization); the staged
 arrays are then consumed by jit code (kernels/ or the XLA reference path).
 """
@@ -346,41 +356,56 @@ def _mirror_t_np(tables):
 # Public single-matrix packers
 # ---------------------------------------------------------------------------
 
-def _infer_n_g(factors: GFactors) -> int:
+def _infer_n_g(factors: GFactors, n: Optional[int] = None) -> int:
+    """Matrix side for a G-chain: the caller's ``n`` when given (a ragged
+    chain embedded in a wider bucket touches only its leading coordinates,
+    so inferring from the indices would shrink the table width AND plant
+    the structural no-op pad index inside the signal), else max index + 1.
+    """
     fi = np.asarray(factors.i)
     fj = np.asarray(factors.j)
-    return int(max(fi.max(initial=0), fj.max(initial=0))) + 1
+    inferred = int(max(fi.max(initial=0), fj.max(initial=0))) + 1
+    if n is None:
+        return inferred
+    if n < inferred:
+        raise ValueError(f"explicit n={n} smaller than the largest factor "
+                         f"coordinate ({inferred - 1})")
+    return int(n)
 
 
 def pack_g(factors: GFactors,
-           cuts: Optional[Sequence[int]] = None) -> "StagedG":
+           cuts: Optional[Sequence[int]] = None,
+           n: Optional[int] = None) -> "StagedG":
     """Stage a G-chain (synthesis direction, Ubar).  ``cuts`` lists
     component counts that must be exactly cuttable (default: the quarters
-    ladder); significant components land in the TAIL stages."""
-    n = _infer_n_g(factors)
+    ladder); significant components land in the TAIL stages.  ``n`` pins
+    the table width (required for ragged chains embedded in a wider
+    bucket; default: inferred from the factor indices)."""
+    n = _infer_n_g(factors, n)
     tables, cut, _ = _pack_g_np(factors, n, cuts)
     return StagedG(*map(jnp.asarray, tables), cut, n)
 
 
 def pack_g_adjoint(factors: GFactors,
-                   cuts: Optional[Sequence[int]] = None) -> "StagedG":
+                   cuts: Optional[Sequence[int]] = None,
+                   n: Optional[int] = None) -> "StagedG":
     """Staged form of Ubar^T: the stage-MIRROR of ``pack_g(factors)``
     (same stages, reversed order, rotations flip s), so the cut ladder of
     both directions aligns: the k most significant components are the
     first ``num_stages`` stages here and the last ``num_stages`` stages of
     the forward tables."""
-    n = _infer_n_g(factors)
+    n = _infer_n_g(factors, n)
     tables, cut, _ = _pack_g_np(factors, n, cuts)
     return StagedG(*map(jnp.asarray, _mirror_g_np(tables)), cut, n)
 
 
 def pack_g_pair(factors: GFactors,
-                cuts: Optional[Sequence[int]] = None
-                ) -> Tuple["StagedG", "StagedG"]:
+                cuts: Optional[Sequence[int]] = None,
+                n: Optional[int] = None) -> Tuple["StagedG", "StagedG"]:
     """(forward, adjoint) staged forms from ONE scheduling pass — the
     adjoint is a mirror of the forward tables, so packing both directions
     separately would run the host scheduler twice for the same chain."""
-    n = _infer_n_g(factors)
+    n = _infer_n_g(factors, n)
     tables, cut, _ = _pack_g_np(factors, n, cuts)
     return (StagedG(*map(jnp.asarray, tables), cut, n),
             StagedG(*map(jnp.asarray, _mirror_g_np(tables)), cut, n))

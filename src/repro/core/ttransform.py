@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .types import SCALE, SHEAR, TFactors, tfactors_identity
+from .gtransform import _masked_default_spectrum, _valid_coords
 from .polyutil import (QUARTIC_POINTS, fit_quartic, minimize_quartic,
                        real_cubic_roots)
 
@@ -265,7 +266,7 @@ def _apply_update(state, kind, i, j, a):
 _REFRESH_EVERY = 8
 
 
-def t_init(c_mat: jnp.ndarray, cbar: jnp.ndarray, m: int
+def t_init(c_mat: jnp.ndarray, cbar: jnp.ndarray, m: int, valid=None
            ) -> Tuple[TFactors, jnp.ndarray]:
     """Theorem-3 greedy initialization of m T-transforms.
 
@@ -273,19 +274,22 @@ def t_init(c_mat: jnp.ndarray, cbar: jnp.ndarray, m: int
     rank-2 updates but REFRESHED from B every _REFRESH_EVERY steps: f32
     drift across hundreds of incremental updates corrupts the scores
     enough to stall the greedy (observed: objective saturates with m).
+    ``valid`` ((n,) bool) restricts the greedy to real coordinates of a
+    ragged matrix embedded in a wider bucket (DESIGN.md §10).
     Returns (factors in application order, final dense approximation B).
     """
     b0 = jnp.diag(cbar.astype(c_mat.dtype))
-    return _t_greedy(c_mat, b0, m)
+    return _t_greedy(c_mat, b0, m, valid)
 
 
-def _t_greedy(c_mat: jnp.ndarray, b0: jnp.ndarray, m: int
+def _t_greedy(c_mat: jnp.ndarray, b0: jnp.ndarray, m: int, valid=None
               ) -> Tuple[TFactors, jnp.ndarray]:
     """Greedy Theorem-3 loop from an arbitrary current approximation
     ``b0`` (= diag(cbar) for a fresh fit; = the fitted reconstruction for
     a warm-start extension, DESIGN.md §9).  New transforms CONJUGATE the
     running approximation (B <- T B T^{-1}), i.e. they are appended to the
-    application order."""
+    application order.  With ``valid``, shear pairs and scaling indices
+    that touch a padding coordinate score +inf and are never selected."""
     n = c_mat.shape[0]
     dtype = c_mat.dtype
     e0 = c_mat - b0
@@ -309,6 +313,10 @@ def _t_greedy(c_mat: jnp.ndarray, b0: jnp.ndarray, m: int
         b_mat, e_mat, v_mat, h_mat, nrow, mcol = state
         a_sh, val_sh = _shear_scores(b_mat, e_mat, v_mat, h_mat, nrow, mcol)
         a_sc, val_sc = _scale_scores(b_mat, e_mat, v_mat, h_mat, nrow, mcol)
+        if valid is not None:
+            pair_ok = jnp.logical_and(valid[:, None], valid[None, :])
+            val_sh = jnp.where(pair_ok, val_sh, jnp.inf)
+            val_sc = jnp.where(valid, val_sc, jnp.inf)
         flat = jnp.argmin(val_sh)
         pi = (flat // n).astype(jnp.int32)
         pj = (flat % n).astype(jnp.int32)
@@ -552,24 +560,31 @@ def _gen_iterate(c_mat, factors, cbar, n_iter, update_spectrum, eps):
     return factors, cbar, obj, hist, it
 
 
-def _approx_gen_core(c_mat, cbar0, m, n_iter, update_spectrum, eps):
+def _approx_gen_core(c_mat, cbar0, m, n_iter, update_spectrum, eps,
+                     size=None):
     """Traceable Algorithm-1 body for the general case (jit-free so the
-    batched engine can wrap it in ``jit(vmap(...))``; DESIGN.md §7)."""
-    factors, _ = t_init(c_mat, cbar0, m)
+    batched engine can wrap it in ``jit(vmap(...))``; DESIGN.md §7).
+    ``size`` (scalar, may be traced/vmapped) masks the Theorem-3 greedy to
+    the leading ``size`` coordinates of a zero-padded ragged matrix; the
+    polish and Lemma-2 refits then stay confined to the valid block by
+    construction (padding rows/cols of C and B are zero; DESIGN.md §10).
+    """
+    factors, _ = t_init(c_mat, cbar0, m, _valid_coords(c_mat, size))
     cbar = _gen_refit_spectrum(c_mat, factors, cbar0, update_spectrum)
     return _gen_iterate(c_mat, factors, cbar, n_iter, update_spectrum, eps)
 
 
 def _extend_gen_core(c_mat, factors0, cbar0, m_extra, n_iter,
-                     update_spectrum, eps):
+                     update_spectrum, eps, size=None):
     """Warm-start extension for the general case (DESIGN.md §9): continue
     the Theorem-3 greedy from the fitted reconstruction, so the
     ``m_extra`` new transforms refine the current residual.  New factors
     conjugate the running approximation and are therefore APPENDED in
     application order (extending the discovery order, which for the T
-    family coincides with application order)."""
+    family coincides with application order).  ``size`` masks the appended
+    greedy like ``_approx_gen_core``."""
     b0 = t_reconstruct(factors0, cbar0.astype(c_mat.dtype))
-    new, _ = _t_greedy(c_mat, b0, m_extra)
+    new, _ = _t_greedy(c_mat, b0, m_extra, _valid_coords(c_mat, size))
     factors = TFactors(*(jnp.concatenate([of, nf])
                          for of, nf in zip(factors0, new)))
     cbar = _gen_refit_spectrum(c_mat, factors, cbar0, update_spectrum)
@@ -580,11 +595,16 @@ _approx_gen_jit = functools.partial(jax.jit, static_argnames=(
     "m", "n_iter", "update_spectrum"))(_approx_gen_core)
 
 
-def default_cbar(c_mat: jnp.ndarray) -> jnp.ndarray:
+def default_cbar(c_mat: jnp.ndarray, sizes=None) -> jnp.ndarray:
     """Default spectrum estimate diag(C) + deterministic tie-break; accepts
-    a single (n, n) matrix or a leading-batched (..., n, n) stack."""
+    a single (n, n) matrix or a leading-batched (..., n, n) stack.
+    ``sizes`` marks ragged matrices embedded in the n-wide bucket (see
+    ``gtransform.default_sbar``): statistics follow each matrix's true
+    size and padding coordinates get exactly zero."""
     n = c_mat.shape[-1]
     cbar = jnp.diagonal(c_mat, axis1=-2, axis2=-1)
+    if sizes is not None:
+        return _masked_default_spectrum(cbar, sizes, c_mat.dtype)
     scale = jnp.maximum(jnp.std(cbar, axis=-1, keepdims=True), 1e-6)
     return cbar + 1e-6 * scale * jnp.arange(n, dtype=c_mat.dtype) / n
 

@@ -14,6 +14,13 @@ Shape/dtype conventions (DESIGN.md §4):
   * tables are stored f32; the apply casts them to ``x.dtype`` (bf16
     signals are supported — see tests/test_kernels.py dtype sweeps).
 
+Ragged fleets (DESIGN.md §10): a masked (size-bucketed) fit's tables act
+as the identity on each matrix's padding coordinates, so these ops need
+no extra arguments for ragged batches — plain applies pass padded signal
+coordinates through untouched, and the fused operators zero them (the
+padded spectrum is zero).  Parity against per-matrix own-size fits is
+asserted in tests/test_ragged.py.
+
 Anytime prefixes (DESIGN.md §9): every op takes a static ``num_stages``.
 ``None`` runs the full chain; an integer cuts the staged tables at that
 stage boundary, so a truncated transform costs proportionally fewer

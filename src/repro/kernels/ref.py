@@ -5,6 +5,11 @@ tests/test_kernels.py shape/dtype sweeps).  They are also the production
 ``backend="xla"`` path used by the dry-run (Pallas TPU kernels cannot lower
 on the CPU backend; DESIGN.md §4).
 
+Padding entries in the staged tables carry the out-of-bounds index ``n``:
+reads clip (the value is never used), writes drop — which also gives the
+ragged-fleet semantics for free (DESIGN.md §10): a masked bucket fit's
+chain leaves each matrix's padding coordinates untouched.
+
 Every oracle takes a static ``num_stages`` prefix argument (DESIGN.md §9):
 ``None`` applies the full staged chain; an integer cuts the stage tables at
 that boundary BEFORE the scan, so a truncated transform costs exactly

@@ -160,12 +160,35 @@ def named_responses(spec: str) -> "Dict[str, Response]":
     return bank
 
 
+def _mask_padded_gains(gains: jnp.ndarray, basis) -> jnp.ndarray:
+    """Zero the gains at a ragged basis's padding coordinates.
+
+    A masked (size-bucketed) fit carries zeros in the padded spectrum
+    slots, but a response may map 0 to a nonzero gain (heat/tikhonov:
+    h(0) = 1).  ``ApproxEigenbasis.project`` masks its own gains at
+    depth; this helper covers the FUSED bank path (``SpectralFilterBank
+    .apply`` dispatches precomputed (B, F, n) gains straight into the
+    bank kernels, bypassing ``project``) and the public ``gains()``
+    contract (DESIGN.md §10)."""
+    sizes = getattr(basis, "sizes", None)
+    if sizes is None:
+        return gains
+    n = gains.shape[-1]
+    # batched: (B,) sizes -> (B, n) mask; unbatched: scalar size -> (n,)
+    # mask (a reshape(-1, 1) here would silently grow (n,) gains to
+    # (1, n) and break the gains() shape contract)
+    valid = np.arange(n) < np.asarray(sizes)[..., None]
+    return jnp.where(jnp.asarray(valid), gains, 0.0)
+
+
 @dataclass(frozen=True)
 class SpectralFilter:
     """One response bound to a fitted basis: y = Ubar diag(h(s)) Ubar^T x.
 
     ``basis`` may be single ((n, n) fit) or batched ((B, n, n) fit); the
-    signal layout follows ``ApproxEigenbasis.project``."""
+    signal layout follows ``ApproxEigenbasis.project``.  For a ragged
+    (size-bucketed) basis the gains are zeroed at each graph's padding
+    coordinates, so padded signal columns filter to zero."""
 
     basis: object               # ApproxEigenbasis
     response: Response
@@ -173,10 +196,14 @@ class SpectralFilter:
 
     def gains(self) -> jnp.ndarray:
         """Diagonal gains h(spectrum): (n,) or (B, n)."""
-        return self.response(self.basis.spectrum)
+        return _mask_padded_gains(self.response(self.basis.spectrum),
+                                  self.basis)
 
     def apply(self, x: jnp.ndarray, backend: str = "xla") -> jnp.ndarray:
-        """Filter signals x (..., n) / (B, ..., n) -> same shape."""
+        """Filter signals x (..., n) / (B, ..., n) -> same shape
+        (``project`` itself zeroes the gains at a ragged basis's padding
+        coordinates; the explicit mask here is only for the fused bank
+        path, which bypasses ``project``)."""
         return self.basis.project(x, h=self.response, backend=backend)
 
 

@@ -6,3 +6,44 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Session-scoped fitted bases: greedy fits (and their jit compiles) are the
+# dominant cost of this suite, so parity/semantics tests that only need
+# SOME fitted basis share one fit instead of each paying for their own.
+# Tests that assert properties of specific fit hyperparameters still fit
+# locally.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="session")
+def sym_batch48():
+    """(mats, basis): one batched symmetric fit (B=3, n=16, g=48,
+    n_iter=1) shared across batched-engine parity tests."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import ApproxEigenbasis
+    x = np.random.default_rng(1).standard_normal((3, 16, 16)).astype(
+        np.float32)
+    mats = jnp.asarray(x + np.swapaxes(x, 1, 2))
+    return mats, ApproxEigenbasis.fit(mats, 48, n_iter=1)
+
+
+@pytest.fixture(scope="session")
+def ragged_sym_fit():
+    """(fleet, basis): a mixed-size symmetric fleet (sizes 10/16/9/16)
+    and its masked bucket fit (g=16, n_iter=1), shared across the ragged
+    parity/pad-semantics/persistence tests."""
+    import numpy as np
+    from repro.core import ApproxEigenbasis
+
+    def s(n, seed):
+        x = np.random.default_rng(seed).standard_normal((n, n)).astype(
+            np.float32)
+        return x + x.T
+
+    fleet = [s(10, 0), s(16, 1), s(9, 2), s(16, 3)]
+    return fleet, ApproxEigenbasis.fit(fleet, 16, n_iter=1)

@@ -1,6 +1,7 @@
 """Baselines the paper compares against (Jacobi, greedy Givens, rank-r)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.core import (approximate_symmetric, truncated_jacobi,
                         factorize_orthonormal, rank_r_symmetric,
@@ -32,6 +33,7 @@ def test_jacobi_spectrum_is_diag_of_working():
     np.testing.assert_allclose(np.asarray(spec), np.diag(w), atol=1e-4)
 
 
+@pytest.mark.slow
 def test_proposed_beats_jacobi_on_frobenius():
     """Paper Fig. 2: the proposed method dominates truncated Jacobi on the
     reconstruction objective (averaged over seeds)."""

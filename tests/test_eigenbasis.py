@@ -35,6 +35,7 @@ def test_batched_sym_fit_matches_single_runs():
         np.testing.assert_allclose(rel_batched[i], rel_single, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_batched_gen_fit_matches_single_runs():
     b, n, m = 4, 16, 40
     mats = _gen_batch(b, n)
@@ -48,24 +49,23 @@ def test_batched_gen_fit_matches_single_runs():
         np.testing.assert_allclose(rel_batched[i], rel_single, atol=1e-5)
 
 
-def test_batched_objective_matches_dense_reconstruction():
-    mats = _sym_batch(3, 16, seed=1)
-    basis = ApproxEigenbasis.fit(mats, 48, n_iter=1)
+def test_batched_objective_matches_dense_reconstruction(sym_batch48):
+    mats, basis = sym_batch48
     np.testing.assert_allclose(np.asarray(basis.frobenius_error(mats)),
                                np.asarray(basis.objective),
                                rtol=1e-3, atol=1e-3)
 
 
-def test_batched_to_dense_orthonormal():
-    mats = _sym_batch(3, 16, seed=2)
-    basis = ApproxEigenbasis.fit(mats, 48, n_iter=1)
+def test_batched_to_dense_orthonormal(sym_batch48):
+    _, basis = sym_batch48
     u = np.asarray(basis.to_dense())
     eye = np.broadcast_to(np.eye(16, dtype=np.float32), u.shape)
     np.testing.assert_allclose(u @ np.swapaxes(u, 1, 2), eye, atol=1e-5)
 
 
-@pytest.mark.parametrize("kind,make", [("sym", _sym_batch),
-                                       ("general", _gen_batch)])
+@pytest.mark.parametrize("kind,make", [
+    ("sym", _sym_batch),
+    pytest.param("general", _gen_batch, marks=pytest.mark.slow)])
 def test_batched_pallas_matches_ref(kind, make):
     """Batched fused Pallas kernels == vmapped ref.py oracle."""
     b, n, g = 5, 20, 60
@@ -99,7 +99,8 @@ def test_batched_apply_matches_per_matrix_staged_apply():
         np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("make", [_sym_batch, _gen_batch])
+@pytest.mark.parametrize("make", [
+    _sym_batch, pytest.param(_gen_batch, marks=pytest.mark.slow)])
 def test_save_load_roundtrip(make, tmp_path):
     b, n, g = 3, 16, 32
     mats = make(b, n, seed=7)
@@ -131,16 +132,18 @@ def test_save_load_roundtrip_single(tmp_path):
 def test_fit_with_mesh_shards_batch():
     from repro.launch.mesh import make_local_mesh
     mesh = make_local_mesh()
-    mats = _sym_batch(4, 16, seed=11)
+    mats = _sym_batch(3, 16, seed=11)
     basis = ApproxEigenbasis.fit(mats, 32, n_iter=1, mesh=mesh).shard(mesh)
     x = jnp.asarray(np.random.default_rng(12).standard_normal(
-        (4, 2, 16)).astype(np.float32))
-    assert basis.project(x).shape == (4, 2, 16)
+        (3, 2, 16)).astype(np.float32))
+    assert basis.project(x).shape == (3, 2, 16)
 
 
 def test_kind_validation_and_auto():
-    mats = _gen_batch(2, 12, seed=13)
-    basis = ApproxEigenbasis.fit(mats, 24, n_iter=1)
+    # same shape/hyperparams as test_fit_and_extend_reject_score_for_
+    # general_family -> the gen fit program is compiled once for both
+    mats = _gen_batch(2, 10, seed=13)
+    basis = ApproxEigenbasis.fit(mats, 12, n_iter=0)
     assert basis.kind == "general"
     with pytest.raises(ValueError):
         ApproxEigenbasis.fit(jnp.zeros((3, 4, 5)), 8)
@@ -148,6 +151,7 @@ def test_kind_validation_and_auto():
         ApproxEigenbasis.fit(jnp.zeros((4, 4)), 8, kind="bogus")
 
 
+@pytest.mark.slow
 def test_fgft_serve_engine_smoke():
     from repro.launch.serve import serve_fgft, parse_args
     args = parse_args(["--fgft", "--graphs", "3", "--graph-n", "24",
@@ -165,8 +169,11 @@ def test_fgft_serve_engine_smoke():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("make,n_iter", [(_sym_batch, 0), (_sym_batch, 2),
-                                         (_gen_batch, 0), (_gen_batch, 2)])
+@pytest.mark.parametrize("make,n_iter", [
+    (_sym_batch, 0),
+    pytest.param(_sym_batch, 2, marks=pytest.mark.slow),
+    pytest.param(_gen_batch, 0, marks=pytest.mark.slow),
+    pytest.param(_gen_batch, 2, marks=pytest.mark.slow)])
 def test_extend_never_increases_objective(make, n_iter):
     mats = make(3, 16, seed=21)
     base = ApproxEigenbasis.fit(mats, 24, n_iter=n_iter)
@@ -180,6 +187,7 @@ def test_extend_never_increases_objective(make, n_iter):
                                obj1, rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_extend_continues_the_greedy_exactly():
     """With no polish sweeps the greedy is sequential, so extending a
     g1-component init to g2 must reproduce the from-scratch g2 init
@@ -194,17 +202,17 @@ def test_extend_continues_the_greedy_exactly():
                                np.asarray(b.objective), rtol=1e-6)
 
 
-def test_extend_validates_arguments():
-    mats = _sym_batch(2, 12, seed=23)
-    base = ApproxEigenbasis.fit(mats, 16, n_iter=0)
+def test_extend_validates_arguments(sym_batch48):
+    mats, base = sym_batch48
     with pytest.raises(ValueError):
-        base.extend(mats, 16)          # must grow
+        base.extend(mats, 48)          # must grow
     with pytest.raises(ValueError):
-        base.extend(mats[0], 32)       # batched fit needs batched mats
+        base.extend(mats[0], 64)       # batched fit needs batched mats
     with pytest.raises(ValueError):
-        base.extend(_sym_batch(2, 16, seed=24), 32)  # wrong n
+        base.extend(_sym_batch(3, 20, seed=24), 64)  # wrong n
 
 
+@pytest.mark.slow
 def test_fit_auto_warns_when_overriding_hint():
     mats = _sym_batch(2, 12, seed=25)   # numerically symmetric
     with pytest.warns(UserWarning, match="overriding the caller hint"):
@@ -221,9 +229,8 @@ def test_fit_auto_warns_when_overriding_hint():
         ApproxEigenbasis.fit(mats, 16, n_iter=0, hint="symmetric")
 
 
-def test_select_tier_and_prefix_project_matches_prefix_basis():
-    mats = _sym_batch(3, 16, seed=26)
-    basis = ApproxEigenbasis.fit(mats, 48, n_iter=1)
+def test_select_tier_and_prefix_project_matches_prefix_basis(sym_batch48):
+    _, basis = sym_batch48
     num_stages, k = basis.select_tier(fraction=0.5)
     assert 0 < k < 48
     x = jnp.asarray(np.random.default_rng(27).standard_normal(
@@ -241,9 +248,8 @@ def test_select_tier_and_prefix_project_matches_prefix_basis():
                                    rtol=1e-5, atol=1e-5)
 
 
-def test_save_load_preserves_stage_cuts(tmp_path):
-    mats = _sym_batch(2, 16, seed=28)
-    basis = ApproxEigenbasis.fit(mats, 32, n_iter=0)
+def test_save_load_preserves_stage_cuts(sym_batch48, tmp_path):
+    _, basis = sym_batch48
     basis.save(tmp_path, step=1)
     loaded = ApproxEigenbasis.load(tmp_path)
     np.testing.assert_array_equal(np.asarray(basis.stage_cuts),
@@ -273,6 +279,7 @@ def test_fgft_serve_engine_tiers():
             < out["tiers"]["full"]["num_stages"])
 
 
+@pytest.mark.slow
 def test_fgft_serve_engine_directed_kind():
     """--directed must reach the T-transform family (the kind= plumbing
     this PR adds; the service used to silently auto-route)."""
@@ -320,6 +327,7 @@ def test_select_tier_never_picks_the_empty_cut():
     assert k > 0 and ns > 0
 
 
+@pytest.mark.slow
 def test_extend_keeps_original_g_as_a_tier():
     """Regression: the extended tables' ladder must contain the original
     g even when it is not on the new default quarters ladder, so the
@@ -334,6 +342,82 @@ def test_extend_keeps_original_g_as_a_tier():
     np.testing.assert_allclose(
         np.asarray(grown.apply(x, num_stages=ns)),
         np.asarray(base.apply(x)), rtol=1e-5, atol=1e-5)
+
+
+def test_save_load_extend_preserves_score_and_objective(tmp_path):
+    """Regression (confirmed bug): load() used to drop info["score"] and
+    objective, so extend() after a restore silently switched the greedy
+    criterion from "paper" to "gamma".  The manifest now records both."""
+    mats = _sym_batch(2, 12, seed=40)
+    lam = jnp.asarray(np.linalg.eigvalsh(np.asarray(mats)))
+    base = ApproxEigenbasis.fit(mats, 12, n_iter=0, spectrum=lam)
+    assert base.info["score"] == "paper"
+    base.save(tmp_path, step=1)
+    loaded = ApproxEigenbasis.load(tmp_path)
+    assert loaded.info["score"] == "paper"
+    np.testing.assert_allclose(np.asarray(loaded.objective),
+                               np.asarray(base.objective), rtol=1e-6)
+    grown = loaded.extend(mats, 24, n_iter=0)
+    assert grown.info["score"] == "paper"   # was "gamma" before the fix
+
+
+@pytest.mark.slow
+def test_save_load_general_records_no_score(tmp_path):
+    """General-family fits have no score; the restored info stays clean
+    (and the objective still round-trips)."""
+    gmats = _gen_batch(2, 10, seed=41)
+    gen = ApproxEigenbasis.fit(gmats, 12, n_iter=0)
+    gen.save(tmp_path / "gen", step=1)
+    gloaded = ApproxEigenbasis.load(tmp_path / "gen")
+    assert "score" not in gloaded.info
+    np.testing.assert_allclose(np.asarray(gloaded.objective),
+                               np.asarray(gen.objective), rtol=1e-6)
+
+
+def test_fit_and_extend_reject_score_for_general_family():
+    """Regression: score= used to be silently dropped for the T family."""
+    mats = _gen_batch(2, 10, seed=42)
+    with pytest.raises(ValueError, match="symmetric .*family only"):
+        ApproxEigenbasis.fit(mats, 12, score="gamma")
+    base = ApproxEigenbasis.fit(mats, 12, n_iter=0)
+    with pytest.raises(ValueError, match="symmetric .*family only"):
+        base.extend(mats, 24, score="paper")
+
+
+def test_fit_rejects_spectrum_shape_mismatch():
+    mats = _sym_batch(2, 12, seed=43)
+    with pytest.raises(ValueError, match="spectrum shape"):
+        ApproxEigenbasis.fit(mats, 12, spectrum=jnp.zeros((12,)))
+    with pytest.raises(ValueError, match="spectrum shape"):
+        ApproxEigenbasis.fit(mats[0], 12, spectrum=jnp.zeros((2, 12)))
+    # matching shapes still pass
+    ok = ApproxEigenbasis.fit(mats, 12, n_iter=0,
+                              spectrum=jnp.ones((2, 12)))
+    assert ok.info["score"] == "paper"
+
+
+def test_serve_tier_stats_speedup_vs_best():
+    """Regression: the tier stat was named speedup_vs_full but computed
+    against the default (best) tier whatever its name.  It is now
+    speedup_vs_best; the old key survives only as a deprecated alias and
+    only when a tier named "full" actually exists."""
+    from repro.launch.serve import serve_fgft, parse_args
+    args = parse_args(["--fgft", "--graphs", "2", "--graph-n", "16",
+                       "--transforms", "64", "--filter-steps", "1",
+                       "--signals", "2", "--tiers", "full:1.0,draft:0.25"])
+    out = serve_fgft(args)
+    for ts in out["tiers"].values():
+        assert "speedup_vs_best" in ts
+        assert ts["speedup_vs_full"] == ts["speedup_vs_best"]
+    assert out["tiers"]["full"]["speedup_vs_best"] == pytest.approx(1.0)
+    args = parse_args(["--fgft", "--graphs", "2", "--graph-n", "16",
+                       "--transforms", "64", "--filter-steps", "1",
+                       "--signals", "2", "--tiers", "hq:1.0,draft:0.25"])
+    out = serve_fgft(args)
+    for ts in out["tiers"].values():
+        assert "speedup_vs_best" in ts
+        assert "speedup_vs_full" not in ts   # no tier named "full"
+    assert out["tiers"]["hq"]["speedup_vs_best"] == pytest.approx(1.0)
 
 
 def test_extend_reuses_the_fit_score():

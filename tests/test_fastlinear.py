@@ -1,5 +1,6 @@
 """FastEig LM integration layers: butterfly mixing + projection compression."""
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -59,6 +60,7 @@ def test_butterfly_gradients_flow():
     assert float(jnp.abs(g.diag).sum()) > 0
 
 
+@pytest.mark.slow
 def test_compress_linear_reconstruction_improves():
     rng = np.random.default_rng(3)
     n = 24

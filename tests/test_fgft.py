@@ -1,5 +1,6 @@
 """Fast graph Fourier transform (the paper's §5 application)."""
 import numpy as np
+import pytest
 import jax.numpy as jnp
 
 from repro.core import build_fgft, laplacian, relative_error
@@ -16,6 +17,7 @@ def test_laplacian_properties():
     assert ev.min() > -1e-4  # PSD
 
 
+@pytest.mark.slow
 def test_undirected_fgft_accuracy_curve():
     a = community_graph(48, seed=1)
     lap = laplacian(a)
@@ -52,6 +54,7 @@ def test_fgft_filter_matches_dense():
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_directed_fgft():
     a = directed_variant(erdos_renyi(24, p=0.25, seed=6), seed=6)
     lap = laplacian(a)
@@ -65,6 +68,7 @@ def test_directed_fgft():
     np.testing.assert_allclose(np.asarray(x2), x, rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_flops_accounting():
     """Paper Table-1 accounting for one matvec with the reconstructed
     operator: BOTH transform legs plus the n-flop diagonal (the directed
@@ -88,6 +92,7 @@ def test_flops_accounting():
         2 * ((kp == 0).sum() + 2 * (kp == 1).sum()) + n)
 
 
+@pytest.mark.slow
 def test_relative_error_empty_graph_is_finite():
     """Regression: an all-zero Laplacian (empty graph) must give relative
     error 0.0, not a NaN/inf from the unguarded ||L||_F^2 denominator."""
@@ -101,10 +106,52 @@ def test_relative_error_empty_graph_is_finite():
     assert rel_d == 0.0 and np.isfinite(rel_d)
 
 
+@pytest.mark.slow
 def test_directed_cheaper_than_undirected_per_transform():
     """T-transforms: 2 ops/dof vs 6 ops/dof for G (paper §3.2)."""
     a = erdos_renyi(16, seed=9)
-    lu = build_fgft(jnp.asarray(laplacian(a)), 30, directed=False, n_iter=1)
-    ld = build_fgft(jnp.asarray(laplacian(directed_variant(a))), 30,
+    # 32 components (not 30): shares the jitted (n=16, g=32, n_iter=1)
+    # fit programs test_flops_accounting already compiled
+    lu = build_fgft(jnp.asarray(laplacian(a)), 32, directed=False, n_iter=1)
+    ld = build_fgft(jnp.asarray(laplacian(directed_variant(a))), 32,
                     directed=True, n_iter=1)
     assert ld.flops_per_matvec() < lu.flops_per_matvec()
+
+
+def test_select_tier_api_parity_g_family():
+    """FGFT.select_tier delegates to staging.select_cut with the family's
+    orientation already handled by analysis/synthesis/filter — the
+    num_stages it returns must reproduce the prefix chain exactly."""
+    a = community_graph(16, seed=10)
+    f = build_fgft(jnp.asarray(laplacian(a)), 32, directed=False, n_iter=0)
+    num_stages, k = f.select_tier(fraction=0.5)
+    assert 0 < k < 32
+    from repro.core.staging import select_cut
+    assert (num_stages, k) == select_cut(f.fwd, fraction=0.5)
+    x = np.random.default_rng(11).standard_normal((3, 16)).astype(
+        np.float32)
+    got = np.asarray(f.synthesis(jnp.asarray(x), num_stages=num_stages))
+    pre = f.prefix_transforms(k)
+    from repro.core import gapply
+    want = np.asarray(gapply(pre, jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # absolute component targets resolve too, to the nearest exact cut
+    _, k_abs = f.select_tier(num_transforms=32)
+    assert k_abs == 32
+
+
+@pytest.mark.slow
+def test_select_tier_api_parity_t_family():
+    a = directed_variant(community_graph(16, seed=12), seed=12)
+    lap = laplacian(a)
+    assert not np.allclose(lap, lap.T)
+    f = build_fgft(jnp.asarray(lap), 32, directed=True, n_iter=0)
+    num_stages, k = f.select_tier(fraction=0.5)
+    assert 0 < k < 32
+    x = np.random.default_rng(13).standard_normal((3, 16)).astype(
+        np.float32)
+    got = np.asarray(f.synthesis(jnp.asarray(x), num_stages=num_stages))
+    pre = f.prefix_transforms(k)
+    from repro.core import tapply
+    want = np.asarray(tapply(pre, jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,6 +1,7 @@
 """Unit tests for the symmetric-case G-transform factorization (Thm 1/2,
 Lemma 1, Algorithm 1)."""
 import numpy as np
+import pytest
 import jax.numpy as jnp
 
 from repro.core import (approximate_symmetric, g_init, g_polish, g_objective,
@@ -43,6 +44,7 @@ def test_objective_decreases_over_iterations():
     assert np.all(np.diff(hist) <= 1e-3 * hist[0])  # monotone (fp slack)
 
 
+@pytest.mark.slow
 def test_update_spectrum_beats_fixed():
     s = jnp.asarray(random_sym(32, 4))
     ev = np.linalg.eigvalsh(np.asarray(s))
@@ -54,6 +56,7 @@ def test_update_spectrum_beats_fixed():
     assert float(info_upd["objective"]) <= float(info_fix["objective"]) * 1.05
 
 
+@pytest.mark.slow
 def test_theorem1_score_matches_bruteforce():
     """The analytic pair gain must equal the brute-force objective drop."""
     n = 8
@@ -115,6 +118,7 @@ def test_diagonal_matrix_is_exact():
     assert float(info["objective"]) < 1e-6
 
 
+@pytest.mark.slow
 def test_accuracy_improves_with_g():
     s = jnp.asarray(random_sym(32, 11))
     den = float(jnp.sum(s * s))

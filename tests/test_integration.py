@@ -1,12 +1,14 @@
 """Integration tests: train driver (with checkpoint/restart), serve engine,
 graph generators, and the attention consistency across impls."""
 import numpy as np
+import pytest
 import jax
 
 from repro.graphs import (community_graph, erdos_renyi, sensor_graph,
                           directed_variant, real_graph_standin)
 
 
+@pytest.mark.slow
 def test_train_driver_runs_and_resumes(tmp_path):
     from repro.launch import train as train_mod
     ckpt = str(tmp_path / "ckpt")
@@ -23,6 +25,7 @@ def test_train_driver_runs_and_resumes(tmp_path):
     assert np.isfinite(loss2)
 
 
+@pytest.mark.slow
 def test_train_driver_grad_compression(tmp_path):
     from repro.launch import train as train_mod
     loss = train_mod.main([
@@ -33,6 +36,7 @@ def test_train_driver_grad_compression(tmp_path):
     assert np.isfinite(loss)
 
 
+@pytest.mark.slow
 def test_serve_driver(capsys):
     from repro.launch import serve as serve_mod
     outputs = serve_mod.main([
@@ -68,6 +72,7 @@ def test_real_graph_standins_match_specs():
         assert int(np.triu(a, 1).sum()) == m
 
 
+@pytest.mark.slow
 def test_dryrun_runs_tiny_cell_on_one_device():
     """Exercise the step-builder + roofline analysis path on the local
     1-device mesh (the 512-device path is covered by launch/dryrun.py)."""

@@ -43,6 +43,7 @@ def test_butterfly_kernel_sweep(b, n, dtype):
 
 @pytest.mark.parametrize("b,n", SHAPES)
 @pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.slow
 def test_shear_kernel_sweep(b, n, dtype):
     fwd, _, _ = _staged_t(n, 2 * n, seed=b)
     x = jnp.asarray(np.random.default_rng(2).standard_normal((b, n)), dtype)
@@ -66,6 +67,7 @@ def test_fused_sym_kernel(b, n):
 
 
 @pytest.mark.parametrize("b,n", [(4, 16), (33, 32)])
+@pytest.mark.slow
 def test_fused_gen_kernel(b, n):
     fwd, inv, cbar = _staged_t(n, 3 * n, seed=8)
     x = jnp.asarray(np.random.default_rng(4).standard_normal((b, n)),
@@ -109,6 +111,7 @@ def _tier_boundaries(staged):
     return [int(s) for s, k in np.asarray(staged.cuts) if k > 0]
 
 
+@pytest.mark.slow
 def test_butterfly_prefix_parity_all_tiers():
     fwd, adj, _ = _staged_g(24, 60, seed=11)
     x = jnp.asarray(np.random.default_rng(7).standard_normal((9, 24)),
@@ -122,6 +125,7 @@ def test_butterfly_prefix_parity_all_tiers():
                                        rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_shear_prefix_parity_all_tiers():
     fwd, inv, _ = _staged_t(20, 40, seed=12)
     x = jnp.asarray(np.random.default_rng(8).standard_normal((6, 20)),
@@ -135,6 +139,7 @@ def test_shear_prefix_parity_all_tiers():
                                        rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_fused_prefix_parity_all_tiers():
     fwd, adj, sbar = _staged_g(16, 48, seed=13)
     x = jnp.asarray(np.random.default_rng(9).standard_normal((5, 16)),

@@ -23,6 +23,7 @@ def _batch(cfg, b=2, s=32, seed=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_arch_smoke_forward_and_loss(arch):
     cfg = get_config(arch, smoke=True)
@@ -38,6 +39,7 @@ def test_arch_smoke_forward_and_loss(arch):
     assert axes  # logical axes recorded for every param
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_arch_smoke_grad_step(arch):
     cfg = get_config(arch, smoke=True)
@@ -50,6 +52,7 @@ def test_arch_smoke_grad_step(arch):
     assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma2-27b",
                                   "recurrentgemma-2b", "mamba2-780m",
                                   "qwen3-moe-30b-a3b",
@@ -75,6 +78,7 @@ def test_decode_matches_forward(arch):
     assert float(jnp.abs(logits_f[:, s] - logits_d[:, 0]).max()) < tol
 
 
+@pytest.mark.slow
 def test_train_reduces_loss_simple():
     """End-to-end: a tiny dense model learns a repetitive stream."""
     from repro.optim import adamw
@@ -118,6 +122,7 @@ def test_local_window_masks_context():
                                np.asarray(out2[:, 8:]), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_pass_through():
     """With capacity_factor tiny, dropped tokens keep their residual."""
     cfg = get_config("qwen3-moe-30b-a3b", smoke=True).replace(

@@ -1,5 +1,6 @@
 """AdamW, schedule, clipping, and butterfly gradient compression."""
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -90,6 +91,7 @@ def test_error_feedback_identity_decomposition():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 def test_ef_sgd_converges_despite_compression():
     """EF-compressed gradient descent still reaches the optimum (requires
     the round-robin kept window — a fixed window provably cannot)."""
@@ -105,6 +107,7 @@ def test_ef_sgd_converges_despite_compression():
     np.testing.assert_allclose(np.asarray(w), np.asarray(target), atol=0.05)
 
 
+@pytest.mark.slow
 def test_fixed_window_does_not_converge():
     """Negative control for the round-robin design decision."""
     spec = compress.make_spec(width=32, ratio=0.25)

@@ -10,8 +10,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (approximate_symmetric, g_to_dense, gapply,
-                        pack_g, pack_t, tapply)
+from repro.core import (ApproxEigenbasis, approximate_symmetric,
+                        g_to_dense, gapply, pack_g, pack_t, tapply)
 from repro.core.polyutil import minimize_quartic, real_cubic_roots
 from repro.core.types import SCALE, SHEAR, TFactors, GFactors
 from repro.kernels import ref
@@ -143,6 +143,58 @@ def test_cubic_root_candidates_cover_true_roots(lead, neg, rest):
     for r in true_real:
         dist = np.min(np.abs(roots - r))
         assert dist <= 1e-2 * (1.0 + abs(r)) ** 2, (roots, true_real)
+
+
+# ---------------------------------------------------------------------------
+# Masked-solver invariants (ragged fleets, DESIGN.md §10).  Shapes are
+# FIXED (n, B, g constant; only sizes/seeds vary) so each family compiles
+# its fit program exactly once across all hypothesis examples.
+# ---------------------------------------------------------------------------
+
+_RAGGED_N, _RAGGED_B, _RAGGED_G = 12, 2, 8
+
+
+@st.composite
+def ragged_sizes(draw):
+    seed = draw(st.integers(0, 2 ** 16))
+    sizes = [draw(st.integers(2, _RAGGED_N)) for _ in range(_RAGGED_B)]
+    # at least one matrix must be genuinely ragged or the fit drops the
+    # masking entirely (sizes == n normalizes to None)
+    if all(s == _RAGGED_N for s in sizes):
+        sizes[0] = draw(st.integers(2, _RAGGED_N - 1))
+    return sizes, seed
+
+
+@given(ragged_sizes())
+def test_masked_sym_fit_never_touches_padding(case):
+    sizes, seed = case
+    rng = np.random.default_rng(seed)
+    stack = np.zeros((_RAGGED_B, _RAGGED_N, _RAGGED_N), np.float32)
+    for b, s in enumerate(sizes):
+        x = rng.standard_normal((s, s)).astype(np.float32)
+        stack[b, :s, :s] = x + x.T
+    basis = ApproxEigenbasis.fit(jnp.asarray(stack), _RAGGED_G, n_iter=0,
+                                 sizes=sizes, kind="sym")
+    fi, fj = np.asarray(basis.factors.i), np.asarray(basis.factors.j)
+    for b, s in enumerate(sizes):
+        assert fi[b].max() < s and fj[b].max() < s, (sizes, seed)
+    spec = np.asarray(basis.spectrum)
+    for b, s in enumerate(sizes):
+        assert np.abs(spec[b, s:]).max(initial=0.0) == 0.0
+
+
+@given(ragged_sizes())
+def test_masked_gen_fit_never_touches_padding(case):
+    sizes, seed = case
+    rng = np.random.default_rng(seed)
+    stack = np.zeros((_RAGGED_B, _RAGGED_N, _RAGGED_N), np.float32)
+    for b, s in enumerate(sizes):
+        stack[b, :s, :s] = rng.standard_normal((s, s)).astype(np.float32)
+    basis = ApproxEigenbasis.fit(jnp.asarray(stack), _RAGGED_G, n_iter=0,
+                                 sizes=sizes, kind="general")
+    fi, fj = np.asarray(basis.factors.i), np.asarray(basis.factors.j)
+    for b, s in enumerate(sizes):
+        assert fi[b].max() < s and fj[b].max() < s, (sizes, seed)
 
 
 @given(st.lists(st.floats(-3, 3), min_size=4, max_size=4))

@@ -67,6 +67,7 @@ def test_bank_kernel_matches_oracle_batched(sym_batched):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_bank_kernel_matches_oracle_gen(gen_batched):
     _, basis = gen_batched
     gains = sp.SpectralFilterBank(basis, sp.named_responses(BANK)).gains()

@@ -2,6 +2,7 @@
 prefix-cut semantics (DESIGN.md §9)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.core import (approximate_symmetric, approximate_general,
                         g_to_dense, t_to_dense, pack_g, pack_g_adjoint,
@@ -37,6 +38,7 @@ def test_staged_g_adjoint():
     np.testing.assert_allclose(np.asarray(y), x @ u, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_staged_t_forward_and_inverse():
     n = 14
     c = jnp.asarray(np.random.default_rng(4).standard_normal(
@@ -151,6 +153,7 @@ def test_prefix_cut_g_matches_factor_prefix():
         np.testing.assert_allclose(np.asarray(yh), x @ up, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_prefix_cut_t_matches_factor_prefix():
     n, m = 14, 25
     c = jnp.asarray(np.random.default_rng(14).standard_normal(
@@ -173,6 +176,7 @@ def test_prefix_cut_t_matches_factor_prefix():
                                    rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_prefix_cut_batched_g_and_t():
     """Batched (B, S, P) tables: chunk-uniform padding keeps every cut at
     the SAME stage index for all matrices, so one static num_stages cuts

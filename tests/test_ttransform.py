@@ -1,6 +1,7 @@
 """Unit tests for the general-case T-transform factorization (Thm 3/4,
 Lemma 2, Algorithm 1)."""
 import numpy as np
+import pytest
 import jax.numpy as jnp
 
 from repro.core import (approximate_general, t_init, t_polish, t_objective,
@@ -55,6 +56,7 @@ def test_t_reconstruct_matches_dense():
     np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_objective_decreases_over_iterations():
     c = jnp.asarray(random_gen(24, 4))
     _, _, info = approximate_general(c, m=48, n_iter=5, eps=0.0)
@@ -73,6 +75,7 @@ def test_greedy_init_beats_diagonal_only():
     assert after < base
 
 
+@pytest.mark.slow
 def test_polish_never_regresses():
     c = jnp.asarray(random_gen(16, 6))
     cbar = jnp.diagonal(c)
@@ -83,6 +86,7 @@ def test_polish_never_regresses():
     assert after <= before + 1e-3 * abs(before) + 1e-3
 
 
+@pytest.mark.slow
 def test_lemma2_spectrum_improves_or_matches():
     c = jnp.asarray(random_gen(12, 7))
     cbar0 = jnp.diagonal(c)
@@ -105,6 +109,7 @@ def test_diagonalizable_exact_small():
     assert rel < 0.05
 
 
+@pytest.mark.slow
 def test_accuracy_improves_with_m():
     c = jnp.asarray(random_gen(24, 9))
     den = float(jnp.sum(c * c))
