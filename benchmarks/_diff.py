@@ -1,0 +1,116 @@
+"""Diff two bench-json directories and annotate perf regressions.
+
+Usage (CI; warn-only — the exit code is always 0):
+
+  python -m benchmarks._diff <previous-dir> <current-dir> [--threshold 0.2]
+
+Compares the ``BENCH_<name>.json`` artifacts the benchmark runner writes
+(benchmarks/run.py ``--json-dir``) between the previous successful run
+and the current one, and prints GitHub workflow ``::warning::``
+annotations when
+
+  * a benchmark flipped from pass to fail,
+  * its wall time (``elapsed_s``) grew by more than the threshold, or
+  * a HIGHER-IS-BETTER column's best (max) value dropped by more than
+    the threshold — speedup/throughput columns regressing is exactly
+    the trajectory signal the artifacts exist to catch.
+
+Columns are matched BY NAME via the ``columns`` header the runner
+records alongside the rows (benchmarks/common.py), and only names that
+are unambiguously higher-is-better (``*speedup*``, ``*per_s*``) are
+diffed — timing columns getting smaller is an improvement, not a
+regression, and a benchmark that reorders its columns between runs must
+not produce positional nonsense.  Records without headers (older
+artifacts, error rows) skip the column check.  A leading-underscore
+module name keeps this helper out of the runner's benchmark discovery.
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+
+_HIGHER_IS_BETTER = ("speedup", "per_s")
+
+
+def _metric_column_maxes(rows, columns):
+    """Best (max) value per NAMED higher-is-better column; {} when the
+    record carries no usable header/rows."""
+    if (not isinstance(rows, list) or not rows
+            or not isinstance(columns, list)
+            or not all(isinstance(r, list) for r in rows)):
+        return {}
+    out = {}
+    for c, name in enumerate(columns):
+        if not any(tag in str(name) for tag in _HIGHER_IS_BETTER):
+            continue
+        vals = [r[c] for r in rows
+                if len(r) > c and isinstance(r[c], (int, float))
+                and not isinstance(r[c], bool)]
+        if vals:
+            out[str(name)] = max(vals)
+    return out
+
+
+def diff_records(prev: dict, curr: dict, threshold: float) -> list:
+    """Human-readable regression lines for one benchmark pair."""
+    name = curr.get("benchmark", "?")
+    notes = []
+    if prev.get("status") == "pass" and curr.get("status") == "fail":
+        notes.append(f"{name}: regressed pass -> fail "
+                     f"({curr.get('error')})")
+    pe, ce = prev.get("elapsed_s"), curr.get("elapsed_s")
+    if (isinstance(pe, (int, float)) and isinstance(ce, (int, float))
+            and pe > 0 and ce > pe * (1 + threshold)):
+        notes.append(f"{name}: elapsed_s {pe:.1f} -> {ce:.1f} "
+                     f"(+{(ce / pe - 1) * 100:.0f}%)")
+    prev_cols = _metric_column_maxes(prev.get("rows"),
+                                     prev.get("columns"))
+    curr_cols = _metric_column_maxes(curr.get("rows"),
+                                     curr.get("columns"))
+    for col, pv in prev_cols.items():
+        cv = curr_cols.get(col)
+        if cv is None or pv <= 0:
+            continue
+        if cv < pv * (1 - threshold):
+            notes.append(f"{name}: {col} best value {pv:.4g} -> "
+                         f"{cv:.4g} (-{(1 - cv / pv) * 100:.0f}%)")
+    return notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("previous")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative regression that triggers a warning")
+    args = ap.parse_args(argv)
+    prev_dir = pathlib.Path(args.previous)
+    curr_dir = pathlib.Path(args.current)
+    warned = 0
+    for curr_path in sorted(curr_dir.glob("BENCH_*.json")):
+        prev_path = prev_dir / curr_path.name
+        if not prev_path.exists():
+            print(f"[bench-diff] {curr_path.name}: new benchmark, "
+                  f"no previous record")
+            continue
+        try:
+            prev = json.loads(prev_path.read_text())
+            curr = json.loads(curr_path.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"[bench-diff] {curr_path.name}: unreadable ({exc})")
+            continue
+        notes = diff_records(prev, curr, args.threshold)
+        for note in notes:
+            # GitHub annotation; plain line for local runs
+            print(f"::warning title=bench regression::{note}")
+            warned += 1
+        if not notes:
+            print(f"[bench-diff] {curr_path.name}: ok")
+    print(f"[bench-diff] {warned} regression warning(s) "
+          f"(threshold {args.threshold:.0%})")
+    return 0    # warn-only by design: annotations, never a failed job
+
+
+if __name__ == "__main__":
+    sys.exit(main())

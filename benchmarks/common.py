@@ -3,9 +3,15 @@ import time
 
 import numpy as np
 
+# last header emitted per benchmark name: run.py persists it into the
+# BENCH_*.json records so benchmarks/_diff.py can compare columns BY NAME
+# (and know their direction) instead of by position
+LAST_HEADERS = {}
+
 
 def emit(name: str, rows, header):
     """Print a small CSV block for one benchmark (one per paper figure)."""
+    LAST_HEADERS[name] = [str(h) for h in header]
     print(f"\n## {name}")
     print(",".join(header))
     for row in rows:

@@ -1,0 +1,176 @@
+"""Fig. 11 (repo-original): the dynamic-graph subsystem — drift-triggered
+incremental refits vs from-scratch refitting on an evolving Erdős–Rényi
+stream (DESIGN.md §11).
+
+A static serving stack answers an evolving graph the only way it can:
+refit from scratch and rebuild the engine after every update batch.  The
+dynamic subsystem instead scores drift stochastically (dynamic/drift.py),
+lets the threshold/hysteresis controller (dynamic/refit.py) pick the
+cheapest restoring action per round, and hot-swaps basis versions under
+the serving engine.  The stream mixes the two real update regimes: most
+rounds are edge-weight jitter (sensor/traffic weights drift constantly —
+a Lemma-1 spectrum refresh absorbs them), with periodic topology churn
+(inserts/deletes rotate eigenvectors and trigger a full drift-scored
+refit through the CACHED fit program).  This benchmark gates the claims
+that make the design honest, on BOTH backends:
+
+  * COST — streaming the same update sequence through the warmed
+    incremental engine (updates + drift + refresh/refit + serve steps)
+    must be >= 3x cheaper END-TO-END than refitting from scratch every
+    round (same serve steps, same component budget);
+  * QUALITY — the incremental engine's final relative error must stay
+    within 1.1x of the scratch refitter's (matched error: the speedup
+    cannot come from silently serving a stale basis);
+  * STRUCTURE — after ``apply_updates`` + a maintenance swap the engine
+    answers queries with the UPDATED basis through the SAME compiled
+    step program: the steady-state hot path recompiles exactly zero
+    times across the whole stream (asserted via the jitted program's
+    cache size).  Two mechanisms make this hold: tier/drift programs
+    take the staged tables as ARGUMENTS, and the dynamic engine PINS the
+    staged-table shape quantization (core/staging.py ``pad``) so every
+    refit lands on identical (B, S, P) tables.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ApproxEigenbasis
+from repro.dynamic import GraphStream, RefitPolicy, exact_rel_residual
+from repro.graphs import edge_perturbation, erdos_renyi, weight_jitter
+from repro.launch.serve import FGFTServeEngine
+from .common import emit
+from .run import gate_assert
+
+_SERVE_STEPS = 3
+
+
+def _round_batch(stream, gid, rnd, topo_rounds):
+    """One update batch for graph ``gid`` in round ``rnd``: topology
+    churn (6% of edges inserted/deleted/reweighted) on the designated
+    rounds, gentle weight jitter (20% of edges, ±10%) otherwise."""
+    n_edges = int((np.triu(stream.adjs[gid], 1) > 0).sum())
+    if rnd in topo_rounds:
+        return edge_perturbation(stream.adjs[gid],
+                                 max(int(0.06 * n_edges), 1),
+                                 seed=100 * rnd + gid)
+    return weight_jitter(stream.adjs[gid], max(int(0.2 * n_edges), 1),
+                         scale=0.1, seed=100 * rnd + gid)
+
+
+def run(fast: bool = False):
+    b = 4
+    n = 24 if fast else 32
+    rounds = 6 if fast else 8
+    topo_rounds = {2} if fast else {2, 5}
+    n_iter = 3
+    g = int(0.5 * n * np.log2(n))
+    rng = np.random.default_rng(0)
+    lowpass = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
+    policy = RefitPolicy(refresh=0.0008, extend=0.008, refit=0.008,
+                         num_probes=32, hysteresis=1.0, max_extends=0)
+    adjs0 = [erdos_renyi(n, 0.3, seed=31 * gid) for gid in range(b)]
+
+    rows = []
+    speed, err_ratio = {}, {}
+    for backend in ("xla", "pallas"):
+        x = jnp.asarray(rng.standard_normal((b, 8, n)).astype(np.float32))
+
+        # --- incremental: drift-triggered refresh/refit, hot swaps -----
+        stream = GraphStream([a.copy() for a in adjs0])
+        laps0 = np.stack(stream.laplacians())
+        engine = FGFTServeEngine(jnp.asarray(laps0), g, n_iter=n_iter,
+                                 backend=backend, tiers={"full": 1.0},
+                                 dynamic=True, policy=policy)
+        engine.warmup(x)
+        prog = engine._live.fns[engine.default_tier]
+        compiles_before = prog._cache_size()
+        actions = []
+        t0 = time.time()
+        for rnd in range(rounds):
+            for gid in range(b):
+                engine.apply_updates(gid, stream.apply(
+                    gid, _round_batch(stream, gid, rnd, topo_rounds)))
+            actions.append(engine.maintain()["action"])
+            for _ in range(_SERVE_STEPS):
+                y = engine.step(x, lowpass)
+        jax.block_until_ready(y)
+        t_inc = time.time() - t0
+        stats = engine.stats["dynamic"]["actions"]
+        # zero steady-state recompiles: refresh swaps reuse the table-
+        # argument programs, refits land on the PINNED table shapes; only
+        # an extend (never triggered here: max_extends=0) grows them
+        gate_assert(stats["extend"] == 0, "policy must not extend "
+                    f"(max_extends=0), got {stats}", rows)
+        gate_assert(prog._cache_size() == compiles_before,
+                    f"steady-state step program recompiled across "
+                    f"{len(actions)} update rounds "
+                    f"({compiles_before} -> {prog._cache_size()} cache "
+                    f"entries; actions {actions})", rows)
+        gate_assert(stats["refresh"] > 0 and stats["refit"] > 0,
+                    f"the stream must exercise both refresh and refit "
+                    f"(thresholds miscalibrated?): {stats}", rows)
+        gate_assert(int(np.min(engine.versions)) > 0,
+                    f"every graph must have swapped to a new basis "
+                    f"version, got {engine.versions.tolist()}", rows)
+        err_inc = exact_rel_residual(engine.basis,
+                                     np.asarray(engine._laps_host))
+
+        # --- scratch baseline: full refit + engine rebuild per round ---
+        stream2 = GraphStream([a.copy() for a in adjs0])
+        laps_now = laps0.copy()
+        basis = ApproxEigenbasis.fit(jnp.asarray(laps_now), g,
+                                     n_iter=n_iter)
+        scratch = FGFTServeEngine(jnp.asarray(laps_now), g, n_iter=n_iter,
+                                  backend=backend, tiers={"full": 1.0},
+                                  basis=basis)
+        scratch.step(x, lowpass)                 # warmup/compile
+        t0 = time.time()
+        for rnd in range(rounds):
+            for gid in range(b):
+                laps_now[gid] += stream2.apply(
+                    gid, _round_batch(stream2, gid, rnd, topo_rounds))
+            basis = ApproxEigenbasis.fit(jnp.asarray(laps_now), g,
+                                         n_iter=n_iter)
+            scratch = FGFTServeEngine(jnp.asarray(laps_now), g,
+                                      n_iter=n_iter, backend=backend,
+                                      tiers={"full": 1.0}, basis=basis)
+            for _ in range(_SERVE_STEPS):
+                y = scratch.step(x, lowpass)
+        jax.block_until_ready(y)
+        t_scr = time.time() - t0
+        err_scr = exact_rel_residual(scratch.basis, laps_now)
+
+        # both paths must have seen the identical update stream
+        np.testing.assert_allclose(np.asarray(engine._laps_host),
+                                   laps_now, atol=1e-5)
+        speed[backend] = t_scr / max(t_inc, 1e-9)
+        err_ratio[backend] = (float(err_inc.mean())
+                              / max(float(err_scr.mean()), 1e-9))
+        print(f"[fig11] {rounds} rounds x {b} graphs (n={n}, g={g}): "
+              f"incremental {t_inc:.2f}s vs scratch {t_scr:.2f}s -> "
+              f"{speed[backend]:.1f}x; rel err {err_inc.mean():.4f} vs "
+              f"{err_scr.mean():.4f} (ratio {err_ratio[backend]:.2f}); "
+              f"actions {actions} [{backend}]")
+        rows.append([backend, b, n, g, rounds, t_inc, t_scr,
+                     speed[backend], float(err_inc.mean()),
+                     float(err_scr.mean()), err_ratio[backend],
+                     stats["reuse"], stats["refresh"], stats["refit"]])
+
+    emit("fig11_dynamic", rows,
+         ["backend", "B", "n", "g", "rounds", "t_incremental_s",
+          "t_scratch_s", "speedup", "rel_err_incremental",
+          "rel_err_scratch", "err_ratio", "reuses", "refreshes",
+          "refits"])
+    for backend in ("xla", "pallas"):
+        gate_assert(speed[backend] >= 3.0,
+                    f"drift-triggered incremental maintenance must be "
+                    f">= 3x cheaper end-to-end than from-scratch "
+                    f"refitting on {backend}, got "
+                    f"{speed[backend]:.1f}x", rows)
+        gate_assert(err_ratio[backend] <= 1.1,
+                    f"incremental rel error must stay within 1.1x of "
+                    f"the scratch refitter on {backend}, got "
+                    f"{err_ratio[backend]:.2f}x", rows)
+    return rows

@@ -97,7 +97,9 @@ def main(argv=None):
         record = {"benchmark": name, "fast": bool(args.fast)}
         try:
             rows = benches[name](fast=args.fast)
-            record.update(status="pass", rows=_jsonable(rows))
+            from . import common
+            record.update(status="pass", rows=_jsonable(rows),
+                          columns=common.LAST_HEADERS.get(name))
             print(f"[{name} done in {time.time() - t0:.1f}s]")
         except Exception as exc:  # noqa: BLE001 — report all benches
             failures += 1

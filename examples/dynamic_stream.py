@@ -1,0 +1,95 @@
+"""Serving an EVOLVING graph fleet: streaming updates, drift scoring,
+and versioned hot swaps (DESIGN.md §11).
+
+Real graph fleets change edge-by-edge while queries keep arriving.  This
+example walks the dynamic subsystem end to end:
+
+  1. update tracking — ``GraphStream`` maintains the current adjacency
+     per graph and turns edge insert/delete/reweight batches
+     (``edge_perturbation`` / ``weight_jitter``) into Laplacian deltas;
+  2. drift scoring — a Hutchinson estimate of how much objective the
+     fitted basis has lost on the updated Laplacians, batched in one
+     cached jitted program (no dense eigendecompositions);
+  3. drift-triggered refits — the threshold/hysteresis controller picks
+     the cheapest restoring action per round (reuse / Lemma-1 spectrum
+     refresh / warm-start extend / full refit);
+  4. versioned serving — ``FGFTServeEngine`` applies updates off the hot
+     path and atomically swaps basis versions; a refresh swap reuses the
+     compiled step program (zero steady-state recompilation);
+  5. persistence — versions and drift/refit counters survive
+     ``engine.save`` / ``FGFTServeEngine.load``.
+
+  PYTHONPATH=src python examples/dynamic_stream.py
+"""
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.dynamic import GraphStream, RefitPolicy
+from repro.graphs import edge_perturbation, erdos_renyi, weight_jitter
+from repro.launch.serve import FGFTServeEngine
+
+
+def main():
+    rng = np.random.default_rng(0)
+    b, n = 4, 48
+    g = int(n * np.log2(n))
+    adjs = [erdos_renyi(n, 0.3, seed=s) for s in range(b)]
+    stream = GraphStream(adjs)
+    laps = np.stack(stream.laplacians())
+
+    policy = RefitPolicy(refresh=0.001, extend=0.01, refit=0.1,
+                         num_probes=32, hysteresis=1.0)
+    engine = FGFTServeEngine(jnp.asarray(laps), g, n_iter=2,
+                             tiers={"full": 1.0, "draft": 0.25},
+                             dynamic=True, policy=policy)
+    x = jnp.asarray(rng.standard_normal((b, 16, n)).astype(np.float32))
+    lowpass = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
+    engine.warmup(x)
+    print(f"[dynamic] fitted {b} evolving graphs (n={n}, g={g}); "
+          f"initial versions {engine.versions.tolist()}")
+
+    # --- stream rounds: gentle jitter, then a topology shock -------------
+    for rnd in range(4):
+        for gid in range(b):
+            n_edges = int((np.triu(stream.adjs[gid], 1) > 0).sum())
+            if rnd == 2:      # round 2: edges appear/disappear
+                batch = edge_perturbation(stream.adjs[gid],
+                                          max(n_edges // 12, 1),
+                                          seed=10 * rnd + gid)
+            else:             # other rounds: weights drift a little
+                batch = weight_jitter(stream.adjs[gid], n_edges // 4,
+                                      scale=0.15, seed=10 * rnd + gid)
+            delta = stream.apply(gid, batch)       # dense Laplacian delta
+            engine.apply_updates(gid, delta)       # hot path untouched
+        res = engine.maintain()                    # off-path controller
+        y = engine.step(x, lowpass)                # queries keep flowing
+        print(f"[dynamic] round {rnd}: max drift "
+              f"{float(np.max(res['drift'])):.4f} -> "
+              f"action={res['action']!r}, versions "
+              f"{engine.versions.tolist()}, served {y.shape}")
+
+    dyn = engine.stats["dynamic"]
+    print(f"[dynamic] actions {dyn['actions']}, "
+          f"{dyn['updates']} update batches absorbed")
+
+    # --- drift is also queryable outside maintain() ----------------------
+    score = engine.drift()
+    print(f"[dynamic] drift on the served basis: "
+          f"{np.round(score, 5).tolist()} (~0: versions are current)")
+
+    # --- persistence: versions + counters survive restart ----------------
+    with tempfile.TemporaryDirectory() as ckpt:
+        engine.save(ckpt, step=1)
+        restored = FGFTServeEngine.load(ckpt)
+        same = np.allclose(np.asarray(restored.step(x, lowpass)),
+                           np.asarray(engine.step(x, lowpass)),
+                           rtol=1e-5, atol=1e-5)
+        print(f"[dynamic] restored versions "
+              f"{restored.versions.tolist()}, counters "
+              f"{restored.controller.counts}, outputs match: {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,2 @@
 from .store import (CheckpointManager, save_checkpoint, restore_checkpoint,
-                    latest_step)
+                    latest_step, read_metadata)

@@ -68,6 +68,22 @@ def save_checkpoint(directory, step: int, state, *, metadata: Optional[dict]
     return final
 
 
+def read_metadata(directory, step: Optional[int] = None) -> dict:
+    """Manifest metadata of a committed checkpoint (latest step when
+    ``step`` is None) WITHOUT restoring any leaves — cheap enough for
+    callers that only need version counters or fit hyperparameters
+    (e.g. ApproxEigenbasis.load, the dynamic serve engines)."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in "
+                                    f"{directory}")
+    manifest = json.loads(
+        (directory / f"step_{step:09d}" / "manifest.json").read_text())
+    return manifest.get("metadata", {})
+
+
 def latest_step(directory) -> Optional[int]:
     directory = pathlib.Path(directory)
     if not directory.exists():

@@ -242,7 +242,8 @@ class ApproxEigenbasis:
             spectrum: Optional[jnp.ndarray] = None,
             score: Optional[str] = None,
             sizes=None,
-            mesh: Optional[Any] = None) -> "ApproxEigenbasis":
+            mesh: Optional[Any] = None,
+            stage_pad: Optional[tuple] = None) -> "ApproxEigenbasis":
         """Factor one matrix (n, n) or a batch (B, n, n) — Algorithm 1.
 
         A batch runs inside ONE jit: the B greedy factorizations advance in
@@ -270,6 +271,15 @@ class ApproxEigenbasis:
         as in ``approximate_symmetric``; ``score`` applies to the
         symmetric family only and is rejected (not silently dropped) for
         a general-family fit.
+
+        ``stage_pad``: optional (depth_quantum, width_quantum) staged-
+        table shape quantization for BATCHED fits (core/staging.py;
+        DESIGN.md §11): rounding each chunk's depth / the stage width up
+        to fixed quanta makes repeated refits of the same (B, n, g)
+        problem land on identical table shapes, so every jitted program
+        holding the tables as arguments (drift scoring, serving tiers)
+        hits its compile cache instead of retracing.  The dynamic serve
+        engines fit with ``stage_pad=(4, 8)``.
         """
         if isinstance(mats, (list, tuple)):
             if sizes is not None:
@@ -327,13 +337,13 @@ class ApproxEigenbasis:
                                       update_spectrum, float(eps), score,
                                       batched, masked)
             factors, sbar, obj, hist, iters = fit_fn(mats, sbar0, *size_arg)
-            fwd, bwd = (pack_g_batch_pair(factors, n) if batched
-                        else pack_g_pair(factors, n=n))
+            fwd, bwd = (pack_g_batch_pair(factors, n, pad=stage_pad)
+                        if batched else pack_g_pair(factors, n=n))
             return cls(kind=SYMMETRIC, n=n, batched=batched,
                        factors=factors, spectrum=sbar, fwd=fwd, bwd=bwd,
                        objective=obj,
                        info={"history": hist, "iterations": iters,
-                             "score": score},
+                             "score": score, "stage_pad": stage_pad},
                        sizes=sizes)
 
         if kind == GENERAL:
@@ -343,12 +353,13 @@ class ApproxEigenbasis:
                                       update_spectrum, float(eps), batched,
                                       masked)
             factors, cbar, obj, hist, iters = fit_fn(mats, cbar0, *size_arg)
-            fwd, bwd = (pack_t_batch_pair(factors, n) if batched
-                        else pack_t_pair(factors, n))
+            fwd, bwd = (pack_t_batch_pair(factors, n, pad=stage_pad)
+                        if batched else pack_t_pair(factors, n))
             return cls(kind=GENERAL, n=n, batched=batched,
                        factors=factors, spectrum=cbar, fwd=fwd, bwd=bwd,
                        objective=obj,
-                       info={"history": hist, "iterations": iters},
+                       info={"history": hist, "iterations": iters,
+                             "stage_pad": stage_pad},
                        sizes=sizes)
 
         raise ValueError(f"unknown kind {kind!r}")
@@ -376,7 +387,8 @@ class ApproxEigenbasis:
     def extend(self, mats: jnp.ndarray, num_transforms: int, *,
                n_iter: int = 0, eps: float = 1e-3,
                update_spectrum: bool = True, score: Optional[str] = None,
-               mesh: Optional[Any] = None) -> "ApproxEigenbasis":
+               mesh: Optional[Any] = None,
+               stage_pad: Optional[tuple] = None) -> "ApproxEigenbasis":
         """Grow this fit to ``num_transforms`` total components WITHOUT
         refitting the prefix: Theorem-1/3-initialized components are
         greedily appended against the current residual (the greedy
@@ -424,7 +436,9 @@ class ApproxEigenbasis:
         # ladder carries the original g as an extra exact cut
         cuts = sorted(set(default_cut_ladder(num_transforms).tolist())
                       | {g_old})
-        info = {"extended_from": g_old}
+        if stage_pad is None:     # keep the fit's shape quantization
+            stage_pad = self.info.get("stage_pad")
+        info = {"extended_from": g_old, "stage_pad": stage_pad}
         if self.kind == SYMMETRIC:
             if score is None:
                 score = self.info.get("score", "gamma")
@@ -434,7 +448,8 @@ class ApproxEigenbasis:
                                          masked)
             factors, sbar, obj, hist, iters = fit_fn(
                 mats, *self.factors, self.spectrum, *size_arg)
-            fwd, bwd = (pack_g_batch_pair(factors, n, cuts=cuts)
+            fwd, bwd = (pack_g_batch_pair(factors, n, cuts=cuts,
+                                          pad=stage_pad)
                         if self.batched
                         else pack_g_pair(factors, cuts=cuts, n=n))
         else:
@@ -442,7 +457,8 @@ class ApproxEigenbasis:
                                          float(eps), self.batched, masked)
             factors, sbar, obj, hist, iters = fit_fn(
                 mats, *self.factors, self.spectrum, *size_arg)
-            fwd, bwd = (pack_t_batch_pair(factors, n, cuts=cuts)
+            fwd, bwd = (pack_t_batch_pair(factors, n, cuts=cuts,
+                                          pad=stage_pad)
                         if self.batched
                         else pack_t_pair(factors, n, cuts=cuts))
         info.update(history=hist, iterations=iters)
@@ -562,11 +578,28 @@ class ApproxEigenbasis:
 
     # -- persistence (checkpoint/store.py; DESIGN.md §6) --------------------
 
-    def save(self, directory, step: int = 0):
-        """Persist factors + spectrum via the atomic checkpoint store."""
+    def save(self, directory, step: int = 0, *,
+             extra_state: Optional[Dict[str, Any]] = None,
+             extra_metadata: Optional[Dict[str, Any]] = None):
+        """Persist factors + spectrum via the atomic checkpoint store.
+
+        ``extra_state``: additional leaves saved alongside (``load``
+        ignores them; callers restore them with their own ``state_like``
+        — the dynamic serve engines persist their tracked Laplacians this
+        way).  ``extra_metadata``: JSON-able keys merged into the
+        manifest metadata next to the ``eigenbasis`` block."""
         from repro.checkpoint import save_checkpoint
         state = {"factors": self.factors, "spectrum": self.spectrum}
-        meta = {
+        for key, leaf in (extra_state or {}).items():
+            if key in state:
+                raise ValueError(f"extra_state key {key!r} collides with "
+                                 "the basis state")
+            state[key] = leaf
+        meta = dict(extra_metadata or {})
+        if "eigenbasis" in meta:
+            raise ValueError("extra_metadata must not carry an "
+                             "'eigenbasis' key")
+        meta.update({
             "eigenbasis": {
                 "kind": self.kind, "n": self.n, "batched": self.batched,
                 "num_transforms": int(
@@ -591,26 +624,32 @@ class ApproxEigenbasis:
                 # ragged-fleet masking (DESIGN.md §10)
                 "sizes": (np.asarray(self.sizes).tolist()
                           if self.sizes is not None else None),
+                # dynamic-subsystem basis version (DESIGN.md §11): bumped
+                # by the serving layer on every hot swap; pre-versioned
+                # checkpoints simply lack the key and load() defaults it
+                # to 0
+                "version": int(self.info.get("version", 0)),
+                # staged-table shape quantization (DESIGN.md §11): load()
+                # must repack with the same quanta or the cut ladder's
+                # stage indices would shift
+                "stage_pad": (list(self.info["stage_pad"])
+                              if self.info.get("stage_pad") else None),
             }
-        }
+        })
         return save_checkpoint(directory, step, state, metadata=meta)
 
     @classmethod
     def load(cls, directory, step: Optional[int] = None
              ) -> "ApproxEigenbasis":
         """Restore a fitted basis and rebuild its staged tables."""
-        from repro.checkpoint import restore_checkpoint, latest_step
+        from repro.checkpoint import (read_metadata, restore_checkpoint,
+                                      latest_step)
         if step is None:
             step = latest_step(directory)
             if step is None:
                 raise FileNotFoundError(
                     f"no committed checkpoint in {directory}")
-        import json
-        import pathlib
-        manifest = json.loads(
-            (pathlib.Path(directory) / f"step_{step:09d}" /
-             "manifest.json").read_text())
-        meta = manifest.get("metadata", {}).get("eigenbasis")
+        meta = read_metadata(directory, step).get("eigenbasis")
         if meta is None:
             raise ValueError(f"checkpoint at {directory} does not hold an "
                              "ApproxEigenbasis state")
@@ -629,12 +668,25 @@ class ApproxEigenbasis:
                 "spectrum": jnp.zeros(nsh, jnp.float32)}
         state, _, _ = restore_checkpoint(directory, like, step=step)
         factors, spectrum = state["factors"], state["spectrum"]
+        stage_pad = meta.get("stage_pad")
+        if stage_pad is not None:
+            stage_pad = tuple(int(q) for q in stage_pad)
+        # repack with the checkpoint's COMPONENT ladder: an extended
+        # basis carries its pre-extension g as an extra exact cut, which
+        # the default quarters ladder would silently drop
+        cuts = None
+        if meta.get("stage_cuts") is not None:
+            cuts = sorted({int(row[1]) for row in meta["stage_cuts"]})
         if kind == SYMMETRIC:
-            fwd, bwd = (pack_g_batch_pair(factors, n) if batched
-                        else pack_g_pair(factors, n=n))
+            fwd, bwd = (pack_g_batch_pair(factors, n, cuts=cuts,
+                                          pad=stage_pad)
+                        if batched else pack_g_pair(factors, cuts=cuts,
+                                                    n=n))
         else:
-            fwd, bwd = (pack_t_batch_pair(factors, n) if batched
-                        else pack_t_pair(factors, n))
+            fwd, bwd = (pack_t_batch_pair(factors, n, cuts=cuts,
+                                          pad=stage_pad)
+                        if batched else pack_t_pair(factors, n,
+                                                    cuts=cuts))
         saved_cuts = meta.get("stage_cuts")
         if (saved_cuts is not None and fwd.cuts is not None
                 and np.asarray(fwd.cuts).tolist() != saved_cuts):
@@ -649,6 +701,10 @@ class ApproxEigenbasis:
         info: Dict[str, Any] = {}
         if meta.get("score") is not None:
             info["score"] = meta["score"]
+        # dynamic-subsystem version: pre-versioned checkpoints carry no
+        # key and restore as version 0 (DESIGN.md §11)
+        info["version"] = int(meta.get("version", 0))
+        info["stage_pad"] = stage_pad
         objective = None
         if meta.get("objective") is not None:
             objective = jnp.asarray(meta["objective"], jnp.float32)

@@ -111,6 +111,14 @@ def _table_fields(staged) -> Tuple[str, ...]:
     return _G_TABLE_FIELDS if isinstance(staged, StagedG) else _T_TABLE_FIELDS
 
 
+def table_arrays(staged) -> Tuple:
+    """The device table arrays of a StagedG/StagedT, WITHOUT the host
+    metadata tail (cuts ladder + width) — the canonical split used by
+    programs that take staged tables as jit arguments (drift scoring,
+    the serving tier programs)."""
+    return tuple(staged[:len(_table_fields(staged))])
+
+
 # ---------------------------------------------------------------------------
 # Prefix metadata helpers
 # ---------------------------------------------------------------------------
@@ -449,25 +457,41 @@ def _tfactors_slice(factors: TFactors, b: int) -> TFactors:
     return TFactors(*(jnp.asarray(np.asarray(f)[b]) for f in factors))
 
 
-def _stack_chunked(per_matrix, stage_bounds_list, pad_values, n):
+def _stack_chunked(per_matrix, stage_bounds_list, pad_values, n,
+                   pad: Optional[Tuple[int, int]] = None):
     """Stack per-matrix staged tables into (B, S, P), padding each CHUNK
     to the batch-max chunk depth (and each stage to the batch-max width).
 
     Chunk-uniform padding keeps every cut boundary at the SAME stage index
     for all B matrices, so one static ``num_stages`` cuts the whole batch
     exactly (DESIGN.md §9).  Pads are structural no-ops (out-of-bounds
-    index ``n`` + identity values)."""
+    index ``n`` + identity values).
+
+    ``pad``: optional (depth_quantum, width_quantum) SHAPE QUANTIZATION
+    (DESIGN.md §11): each chunk's depth rounds up to a multiple of
+    ``depth_quantum`` and the stage width to a multiple of
+    ``width_quantum``.  The greedy packing depth is content-dependent, so
+    two refits of the SAME (B, n, g) problem can produce tables one stage
+    apart — which would retrace every jitted program holding the tables
+    as arguments.  Quantized shapes make steady-state refits land on the
+    compiled-program cache instead, at the cost of a few no-op pad
+    stages."""
     num_chunks = len(stage_bounds_list[0]) - 1
     depths = np.zeros(num_chunks, np.int64)
     for sb in stage_bounds_list:
         depths = np.maximum(depths, np.diff(sb))
+    qd, qw = pad if pad is not None else (1, 1)
+    if qd < 1 or qw < 1:
+        raise ValueError(f"pad quanta must be >= 1, got {(qd, qw)}")
+    depths = -(-depths // qd) * qd
     offs = np.concatenate([[0], np.cumsum(depths)])
     s_max = int(offs[-1]) if offs[-1] > 0 else 1
     p_max = max(t[0].shape[1] for t in per_matrix)
+    p_max = int(-(-p_max // qw) * qw)
     batch = len(per_matrix)
     stacked = []
-    for f, pad in enumerate(pad_values):
-        arr = np.full((batch, s_max, p_max), pad,
+    for f, pad_val in enumerate(pad_values):
+        arr = np.full((batch, s_max, p_max), pad_val,
                       per_matrix[0][f].dtype)
         for b, tables in enumerate(per_matrix):
             sb = stage_bounds_list[b]
@@ -486,7 +510,8 @@ def _batch_cut_table(offs, bounds, g, significance_tail):
 
 
 def _pack_g_batch_np(factors: GFactors, n: int,
-                     cuts: Optional[Sequence[int]]):
+                     cuts: Optional[Sequence[int]],
+                     pad: Optional[Tuple[int, int]] = None):
     fi = np.asarray(factors.i)
     batch, g = fi.shape
     n = max(n, int(max(fi.max(initial=0),
@@ -497,7 +522,7 @@ def _pack_g_batch_np(factors: GFactors, n: int,
         per.append(tables)
         sbs.append(sb)
     pads = (np.int32(n), np.int32(n), 1.0, 0.0, 1.0)
-    stacked, offs = _stack_chunked(per, sbs, pads, n)
+    stacked, offs = _stack_chunked(per, sbs, pads, n, pad)
     bounds = _chunk_bounds(g, cuts, significance_tail=True)
     cut = _batch_cut_table(offs, bounds, g, significance_tail=True)
     return stacked, cut, n
@@ -514,30 +539,34 @@ def _mirror_g_batch_np(stacked):
 
 
 def pack_g_batch(factors: GFactors, n: int, adjoint: bool = False,
-                 cuts: Optional[Sequence[int]] = None) -> "StagedG":
+                 cuts: Optional[Sequence[int]] = None,
+                 pad: Optional[Tuple[int, int]] = None) -> "StagedG":
     """Pack a batch of G-factor chains (leading (B, g) arrays) into one
     StagedG whose tables carry a leading batch dim: (B, S, P).  All B
     chains share one cut ladder; chunk-uniform padding keeps the ladder's
-    stage boundaries aligned across the batch."""
-    stacked, cut, n = _pack_g_batch_np(factors, n, cuts)
+    stage boundaries aligned across the batch.  ``pad``: optional
+    (depth, width) shape quanta (see ``_stack_chunked``)."""
+    stacked, cut, n = _pack_g_batch_np(factors, n, cuts, pad)
     if adjoint:
         stacked = _mirror_g_batch_np(stacked)
     return StagedG(*map(jnp.asarray, stacked), cut, n)
 
 
 def pack_g_batch_pair(factors: GFactors, n: int,
-                      cuts: Optional[Sequence[int]] = None
+                      cuts: Optional[Sequence[int]] = None,
+                      pad: Optional[Tuple[int, int]] = None
                       ) -> Tuple["StagedG", "StagedG"]:
     """(forward, adjoint) batched staged forms from ONE scheduling +
     stacking pass (the O(B·g) host scheduler is the packing cost)."""
-    stacked, cut, n = _pack_g_batch_np(factors, n, cuts)
+    stacked, cut, n = _pack_g_batch_np(factors, n, cuts, pad)
     return (StagedG(*map(jnp.asarray, stacked), cut, n),
             StagedG(*map(jnp.asarray, _mirror_g_batch_np(stacked)),
                     cut, n))
 
 
 def _pack_t_batch_np(factors: TFactors, n: int,
-                     cuts: Optional[Sequence[int]]):
+                     cuts: Optional[Sequence[int]],
+                     pad: Optional[Tuple[int, int]] = None):
     batch, m = np.asarray(factors.kind).shape
     per, sbs = [], []
     for b in range(batch):
@@ -546,7 +575,7 @@ def _pack_t_batch_np(factors: TFactors, n: int,
         per.append(tables)
         sbs.append(sb)
     pads = (np.int32(n), np.int32(n), 1.0, 0.0)
-    stacked, offs = _stack_chunked(per, sbs, pads, n)
+    stacked, offs = _stack_chunked(per, sbs, pads, n, pad)
     bounds = _chunk_bounds(m, cuts, significance_tail=False)
     cut = _batch_cut_table(offs, bounds, m, significance_tail=False)
     return stacked, cut
@@ -560,21 +589,23 @@ def _mirror_t_batch_np(stacked):
 
 
 def pack_t_batch(factors: TFactors, n: int, inverse: bool = False,
-                 cuts: Optional[Sequence[int]] = None) -> "StagedT":
+                 cuts: Optional[Sequence[int]] = None,
+                 pad: Optional[Tuple[int, int]] = None) -> "StagedT":
     """Pack a batch of T-factor chains into one StagedT with (B, S, P)
     tables (``inverse=True`` mirrors the stages into Tbar^{-1} per
     matrix), cut-aligned across the batch like ``pack_g_batch``."""
-    stacked, cut = _pack_t_batch_np(factors, n, cuts)
+    stacked, cut = _pack_t_batch_np(factors, n, cuts, pad)
     if inverse:
         stacked = _mirror_t_batch_np(stacked)
     return StagedT(*map(jnp.asarray, stacked), cut, n)
 
 
 def pack_t_batch_pair(factors: TFactors, n: int,
-                      cuts: Optional[Sequence[int]] = None
+                      cuts: Optional[Sequence[int]] = None,
+                      pad: Optional[Tuple[int, int]] = None
                       ) -> Tuple["StagedT", "StagedT"]:
     """(forward, inverse) batched staged forms from one packing pass."""
-    stacked, cut = _pack_t_batch_np(factors, n, cuts)
+    stacked, cut = _pack_t_batch_np(factors, n, cuts, pad)
     return (StagedT(*map(jnp.asarray, stacked), cut, n),
             StagedT(*map(jnp.asarray, _mirror_t_batch_np(stacked)),
                     cut, n))

@@ -1,0 +1,244 @@
+"""Drift-triggered refit policy: threshold/hysteresis controller + the
+cached compiled refresh programs.
+
+The dynamic subsystem's middle layer (DESIGN.md §11).  Given the drift
+score of dynamic/drift.py, the controller picks the CHEAPEST action that
+restores serving quality:
+
+  REUSE    drift below every threshold — keep serving the current basis.
+  REFRESH  Lemma-1 spectrum-only refresh (symmetric family): the factor
+           chain stays, only ``diag(Ubar^T L' Ubar)`` is recomputed — one
+           cached jitted einsum, no greedy work, no staged-table repack.
+  EXTEND   warm-start ``ApproxEigenbasis.extend`` with a small extra-
+           component budget: the greedy absorbs the perturbation with few
+           extra rotations (Frerix & Bruna, 1905.05796) instead of
+           refitting g components from scratch.
+  REFIT    full from-scratch fit — the escape hatch for structural drift
+           (and the forced action after ``max_extends`` chained extends,
+           so factor chains cannot grow without bound).
+
+Hysteresis (anti-flapping): firing an action records a FLOOR at that
+severity.  The floor only clears when the post-action drift falls below
+``hysteresis x`` that action's threshold; while it stands, a re-trigger
+at (or below) the floored severity ESCALATES one level instead of
+repeating an action that demonstrably did not take.  The full state
+machine is drawn in DESIGN.md §11.
+
+Every refit path runs as a cached compiled program: fit/extend reuse the
+``lru_cache``d ``jit(vmap)`` programs of core/eigenbasis.py, the Lemma-1
+refresh and per-tier prefix refreshes live here (``_lemma1_program`` /
+``_prefix_spectrum_program``) — steady-state updates trigger zero
+recompilation.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.staging import StagedG
+
+
+class Action(enum.Enum):
+    """Refit actions, ascending severity/cost."""
+
+    REUSE = "reuse"
+    REFRESH = "refresh"
+    EXTEND = "extend"
+    REFIT = "refit"
+
+
+_SEVERITY = {Action.REUSE: 0, Action.REFRESH: 1, Action.EXTEND: 2,
+             Action.REFIT: 3}
+_BY_SEVERITY = [Action.REUSE, Action.REFRESH, Action.EXTEND, Action.REFIT]
+
+
+@dataclass(frozen=True)
+class RefitPolicy:
+    """Thresholds on the drift score (dynamic/drift.py) + budgets.
+
+    ``refresh``/``extend``/``refit``: ascending drift thresholds; drift
+    below ``refresh`` means REUSE.  ``hysteresis`` in (0, 1]: an action's
+    floor re-arms only when post-action drift < hysteresis x threshold.
+    ``extend_fraction``: extra components per EXTEND, as a fraction of
+    the ORIGINAL fitted g (relative to the original so chained extends
+    add linearly, not geometrically).  ``max_extends``: chained extends
+    before a forced full refit.  ``num_probes``/``seed``: the Hutchinson
+    drift estimator's budget.
+    """
+
+    refresh: float = 0.01
+    extend: float = 0.08
+    refit: float = 0.5
+    hysteresis: float = 0.5
+    extend_fraction: float = 0.125
+    max_extends: int = 4
+    num_probes: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.refresh <= self.extend <= self.refit:
+            raise ValueError(
+                f"thresholds must be ascending and positive, got "
+                f"refresh={self.refresh}, extend={self.extend}, "
+                f"refit={self.refit}")
+        if not 0.0 < self.hysteresis <= 1.0:
+            raise ValueError(f"hysteresis must be in (0, 1], got "
+                             f"{self.hysteresis}")
+        if not 0.0 < self.extend_fraction:
+            raise ValueError("extend_fraction must be positive")
+        if self.max_extends < 0 or self.num_probes < 1:
+            raise ValueError("max_extends must be >= 0, num_probes >= 1")
+
+    def threshold(self, action: Action) -> float:
+        return {Action.REFRESH: self.refresh, Action.EXTEND: self.extend,
+                Action.REFIT: self.refit}[action]
+
+
+@dataclass
+class RefitController:
+    """The stateful half of the policy: severity mapping, hysteresis
+    floor, extend budget accounting, and action counters (surfaced in
+    serve stats and persisted through engine checkpoints)."""
+
+    policy: RefitPolicy = field(default_factory=RefitPolicy)
+    counts: Dict[str, int] = field(
+        default_factory=lambda: {a.value: 0 for a in Action})
+    extends_since_refit: int = 0
+    _floor: Action = Action.REUSE
+
+    def decide(self, drift, can_refresh: bool = True) -> Action:
+        """Map the worst per-graph drift to an action (pure — counters
+        move in ``record`` once the action actually executed).
+
+        ``can_refresh=False`` marks a family without a cheap spectrum
+        refresh (the general/T family: Lemma 2 needs a dense solve per
+        graph) — a refresh-level trigger escalates straight to EXTEND
+        there, still subject to the ``max_extends`` budget."""
+        p = self.policy
+        d = float(np.max(drift)) if np.size(drift) else 0.0
+        if d >= p.refit:
+            act = Action.REFIT
+        elif d >= p.extend:
+            act = Action.EXTEND
+        elif d >= p.refresh:
+            act = Action.REFRESH
+        else:
+            act = Action.REUSE
+        if act is Action.REFRESH and not can_refresh:
+            act = Action.EXTEND
+        # hysteresis floor: a re-trigger at or below an armed severity
+        # escalates instead of flapping on an action that didn't take
+        if (act is not Action.REUSE
+                and _SEVERITY[act] <= _SEVERITY[self._floor]):
+            act = _BY_SEVERITY[min(_SEVERITY[self._floor] + 1,
+                                   _SEVERITY[Action.REFIT])]
+        if (act is Action.EXTEND
+                and self.extends_since_refit >= p.max_extends):
+            act = Action.REFIT
+        return act
+
+    def record(self, action: Action, post_drift=0.0):
+        """Account an executed action and its post-action drift (which
+        arms or clears the hysteresis floor).  A REUSE tick re-examines
+        an armed floor too: drift that has decayed below the floor's
+        re-arm point clears it, so quiescence restores the cheap-action
+        ladder instead of leaving the next mild trigger to escalate."""
+        self.counts[action.value] += 1
+        if action is Action.REFIT:
+            self.extends_since_refit = 0
+        elif action is Action.EXTEND:
+            self.extends_since_refit += 1
+        d = float(np.max(post_drift)) if np.size(post_drift) else 0.0
+        level = self._floor if action is Action.REUSE else action
+        if level is Action.REUSE:
+            return
+        armed = d >= self.policy.hysteresis * self.policy.threshold(level)
+        self._floor = level if armed else Action.REUSE
+
+    def state_dict(self) -> dict:
+        """JSON-able controller state for checkpoint metadata."""
+        return {"counts": dict(self.counts),
+                "extends_since_refit": int(self.extends_since_refit),
+                "floor": self._floor.value}
+
+    def load_state_dict(self, state: dict):
+        for k, v in (state.get("counts") or {}).items():
+            if k in self.counts:
+                self.counts[k] = int(v)
+        self.extends_since_refit = int(state.get("extends_since_refit", 0))
+        self._floor = Action(state.get("floor", Action.REUSE.value))
+
+
+# ---------------------------------------------------------------------------
+# Cached compiled refresh programs (spectrum-only; symmetric family)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _lemma1_program(batched: bool, n: int):
+    """Cached jitted full-chain Lemma-1 refresh: new spectrum =
+    ``diag(Ubar^T L' Ubar)`` per graph, via n staged applies (no dense
+    eigendecomposition, no greedy work)."""
+    from repro.kernels import ops as kops
+    apply = kops.batched_g_apply if batched else kops.g_apply
+
+    def program(fwd_t, laps):
+        staged = StagedG(*fwd_t, None, n)
+        eye = jnp.eye(n, dtype=jnp.float32)
+        if batched:
+            eye = jnp.broadcast_to(eye, (laps.shape[0], n, n))
+        # staged apply acts on row vectors: rows of apply(eye) are the
+        # basis columns, i.e. apply(eye) == Ubar^T (core/eigenbasis.py)
+        ut = apply(staged, eye, keep="tail")
+        return jnp.einsum("...ij,...jk,...ik->...i", ut, laps, ut)
+
+    return jax.jit(program)
+
+
+@functools.lru_cache(maxsize=None)
+def _prefix_spectrum_program(batched: bool, n: int,
+                             num_stages: Optional[int]):
+    """Cached jitted per-tier Lemma-1 refresh on the ``num_stages``
+    prefix basis (DESIGN.md §9 tiers keep their own refit spectrum
+    across hot swaps)."""
+    from repro.kernels import ops as kops
+    apply = kops.batched_g_apply if batched else kops.g_apply
+
+    def program(fwd_t, laps):
+        staged = StagedG(*fwd_t, None, n)
+        eye = jnp.eye(n, dtype=jnp.float32)
+        if batched:
+            eye = jnp.broadcast_to(eye, (laps.shape[0], n, n))
+        ut = apply(staged, eye, num_stages=num_stages, keep="tail")
+        return jnp.einsum("...ij,...jk,...ik->...i", ut, laps, ut)
+
+    return jax.jit(program)
+
+
+def lemma1_refresh(basis, laps) -> jnp.ndarray:
+    """Refreshed full-chain spectrum for a symmetric basis on updated
+    Laplacians (cached compiled program; zero steady-state recompiles)."""
+    if basis.kind != "sym":
+        raise ValueError("Lemma-1 spectrum refresh applies to the "
+                         "symmetric (G-transform) family only")
+    from .drift import _tables
+    prog = _lemma1_program(basis.batched, basis.n)
+    return prog(_tables(basis.fwd), jnp.asarray(laps, jnp.float32))
+
+
+def prefix_spectrum(basis, laps, num_stages: Optional[int]) -> jnp.ndarray:
+    """Per-tier refreshed spectrum: Lemma 1 on the ``num_stages`` prefix
+    basis (``None`` = full chain)."""
+    if basis.kind != "sym":
+        raise ValueError("prefix spectrum refresh applies to the "
+                         "symmetric family only")
+    from .drift import _tables
+    prog = _prefix_spectrum_program(basis.batched, basis.n,
+                                    None if num_stages is None
+                                    else int(num_stages))
+    return prog(_tables(basis.fwd), jnp.asarray(laps, jnp.float32))

@@ -103,6 +103,121 @@ def real_graph_standin(name: str, seed: int = 0) -> np.ndarray:
     return a
 
 
+# ---------------------------------------------------------------------------
+# Evolving-graph streams (DESIGN.md §11): update batches for the dynamic
+# subsystem.  Generators return repro.dynamic.stream.UpdateBatch objects;
+# the import is deferred so the static generators above stay usable
+# without the dynamic subsystem loaded.
+# ---------------------------------------------------------------------------
+
+
+def edge_perturbation(adj: np.ndarray, num_edges: int, seed: int = 0,
+                      weight: float = 1.0, p_delete: float = 0.5,
+                      directed: bool = False):
+    """One update batch perturbing up to ``num_edges`` edge SLOTS of
+    ``adj``: existing edges are deleted (probability ``p_delete``) or
+    reweighted, absent pairs gain a fresh edge of weight ``weight``.
+
+    Invariants (tests/test_graphs.py): a symmetric adjacency stays
+    symmetric under the batch (each pair appears once, mirror implied);
+    a ``directed_variant`` graph keeps at most ONE direction per pair
+    (inserts pick pairs with no edge in either direction and choose one
+    direction at random; deletes/reweights touch the stored direction);
+    the batch touches at most ``num_edges`` slots (delta sparsity is
+    bounded by the requested churn)."""
+    from repro.dynamic.stream import make_update_batch
+    adj = np.asarray(adj, np.float32)
+    n = adj.shape[0]
+    rng = np.random.default_rng(seed)
+    either = np.maximum(adj, adj.T)             # pair occupancy, any direction
+    iu, ju = np.triu_indices(n, 1)
+    occupied = either[iu, ju] > 0
+    # candidate slots: every (i < j) pair; sample without replacement so
+    # one batch never touches the same pair twice
+    take = min(int(num_edges), iu.size)
+    pick = rng.choice(iu.size, size=take, replace=False)
+    src, dst, dw = [], [], []
+    for e in pick:
+        a, b = int(iu[e]), int(ju[e])
+        if occupied[e]:
+            # the stored direction (symmetric graphs store both; emit the
+            # upper entry once, the batch mirrors it)
+            if not directed or adj[a, b] > 0:
+                i, j = a, b
+            else:
+                i, j = b, a
+            w_old = float(adj[i, j])
+            if rng.uniform() < p_delete:
+                delta = -w_old                   # delete: exact removal
+            else:
+                delta = float(rng.uniform(0.25, 1.0)) * weight - w_old
+                if delta == 0.0:
+                    continue
+        else:
+            if directed and rng.uniform() < 0.5:
+                i, j = b, a                      # fresh edge, one direction
+            else:
+                i, j = a, b
+            delta = float(weight)
+        src.append(i)
+        dst.append(j)
+        dw.append(delta)
+    return make_update_batch(src, dst, dw, symmetric=not directed)
+
+
+def weight_jitter(adj: np.ndarray, num_edges: int, scale: float = 0.2,
+                  seed: int = 0, directed: bool = False):
+    """Reweight-only update batch: up to ``num_edges`` EXISTING edges get
+    a relative weight nudge ``dw = uniform(-scale, scale) * w`` (never
+    crossing zero, so topology is untouched).  This is the gentle end of
+    the update spectrum — a Lemma-1 spectrum refresh absorbs it almost
+    completely, whereas inserts/deletes rotate eigenvectors and need
+    structural refit work (dynamic/refit.py; benchmarks/fig11)."""
+    from repro.dynamic.stream import make_update_batch
+    if not 0.0 < scale < 1.0:
+        raise ValueError(f"scale must be in (0, 1) so reweights never "
+                         f"cross zero, got {scale}")
+    adj = np.asarray(adj, np.float32)
+    rng = np.random.default_rng(seed)
+    ii, jj = np.nonzero(np.triu(adj, 1) if not directed else adj)
+    take = min(int(num_edges), ii.size)
+    if take == 0:
+        return make_update_batch([], [], [], symmetric=not directed)
+    pick = rng.choice(ii.size, size=take, replace=False)
+    i, j = ii[pick], jj[pick]
+    dw = rng.uniform(-scale, scale, take).astype(np.float32) * adj[i, j]
+    return make_update_batch(i, j, dw, symmetric=not directed)
+
+
+def evolving_erdos_renyi(n: int, p: float = 0.3, churn: float = 0.05,
+                         steps: int = 10, seed: int = 0,
+                         directed: bool = False, weight: float = 1.0):
+    """An evolving Erdős–Rényi stream: the initial adjacency plus
+    ``steps`` update batches, each perturbing at most
+    ``ceil(churn * n(n-1)/2)`` edge slots (insert/delete/reweight mix).
+
+    Returns ``(adj0, batches)``; replay the stream with
+    ``repro.dynamic.GraphStream([adj0], directed=directed)`` — the
+    batches were generated against the evolving adjacency, so applying
+    them in order reproduces the generator's internal trajectory
+    exactly."""
+    from repro.dynamic.stream import apply_update
+    if not 0.0 < churn <= 1.0:
+        raise ValueError(f"churn must be in (0, 1], got {churn}")
+    adj0 = erdos_renyi(n, p, seed=seed)
+    if directed:
+        adj0 = directed_variant(adj0, seed=seed)
+    budget = max(int(np.ceil(churn * n * (n - 1) / 2)), 1)
+    adj = adj0.copy()
+    batches = []
+    for t in range(int(steps)):
+        batch = edge_perturbation(adj, budget, seed=seed + 1 + t,
+                                  weight=weight, directed=directed)
+        batches.append(batch)
+        adj = apply_update(adj, batch)
+    return adj0, batches
+
+
 GRAPHS = {
     "community": community_graph,
     "erdos_renyi": erdos_renyi,

@@ -25,6 +25,12 @@ bucket per step, DESIGN.md §10):
   python -m repro.launch.serve --fgft --ragged --graphs 9 \
       --graph-sizes 24,48,64 --filter-steps 20
 
+CPU smoke (EVOLVING fleet — streaming edge updates, drift-triggered
+refits off the hot path, versioned hot swaps, DESIGN.md §11; combine
+with --ragged for per-bucket swaps):
+  python -m repro.launch.serve --fgft --dynamic --graphs 4 \
+      --graph-n 48 --update-rounds 4 --churn 0.02 --filter-steps 10
+
 The LM engine keeps a fixed pool of batch slots; finished requests release
 their slot and the next queued request prefills into it (continuous
 batching at slot granularity — decode never stalls on stragglers within
@@ -42,8 +48,11 @@ work), selectable per step, with per-tier counts in the serve stats.
 from __future__ import annotations
 
 import argparse
+import functools
+import pathlib
 import time
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +63,79 @@ from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as tfm
 
 DEFAULT_TIERS = {"full": 1.0, "balanced": 0.5, "draft": 0.25}
+
+
+# ---------------------------------------------------------------------------
+# Cached serving programs (DESIGN.md §11).  Staged tables + spectrum are
+# ARGUMENTS, not closure constants: a hot-swapped basis version with
+# unchanged table shapes reuses the compiled program, so the steady-state
+# step path never recompiles across dynamic refreshes (fig11 asserts the
+# compile count).  One cache entry per (family, batching, backend, cut,
+# width) serves every engine and every version in the process.
+# ---------------------------------------------------------------------------
+
+def _tables(staged) -> tuple:
+    """Device table arrays of a StagedG/StagedT (the canonical split
+    lives in core/staging.py; deferred import keeps serve.py import-light
+    before mesh setup)."""
+    from repro.core.staging import table_arrays
+    return table_arrays(staged)
+
+
+@functools.lru_cache(maxsize=None)
+def _tier_program(kind: str, batched: bool, backend: str,
+                  num_stages: Optional[int], n: int):
+    """Jitted fused-operator program for one serving tier."""
+    from repro.core.staging import StagedG, StagedT
+    from repro.kernels import ops as kops
+    cls = StagedG if kind == "sym" else StagedT
+    if kind == "sym":
+        op = kops.batched_sym_operator if batched else kops.sym_operator
+    else:
+        op = kops.batched_gen_operator if batched else kops.gen_operator
+
+    def program(fwd_t, bwd_t, d, x):
+        return op(cls(*fwd_t, None, n), cls(*bwd_t, None, n), d, x,
+                  backend=backend, num_stages=num_stages)
+
+    return jax.jit(program)
+
+
+@functools.lru_cache(maxsize=None)
+def _bank_program(kind: str, batched: bool, backend: str, n: int):
+    """Jitted fused filter-bank program (full tier; DESIGN.md §8)."""
+    from repro.core.staging import StagedG, StagedT
+    from repro.kernels import ops as kops
+    cls = StagedG if kind == "sym" else StagedT
+    if kind == "sym":
+        op = (kops.batched_sym_filter_bank if batched
+              else kops.sym_filter_bank)
+    else:
+        op = (kops.batched_gen_filter_bank if batched
+              else kops.gen_filter_bank)
+
+    def program(fwd_t, bwd_t, gains, x):
+        return op(cls(*fwd_t, None, n), cls(*bwd_t, None, n), gains, x,
+                  backend=backend)
+
+    return jax.jit(program)
+
+
+@dataclass(frozen=True)
+class _LiveVersion:
+    """One immutable serving version: everything ``step``/``step_bank``
+    read, bundled so the hot swap is a single attribute store (readers
+    grab ``self._live`` once and never see a half-updated engine)."""
+
+    basis: Any
+    fwd: tuple
+    bwd: tuple
+    tiers: Dict[str, dict]
+    fns: Dict[str, Any]
+    bank: Any
+    bank_gains: Any
+    bank_fn: Any
+    version: int
 
 
 def parse_tiers(spec: str) -> Dict[str, float]:
@@ -128,9 +210,35 @@ def parse_args(argv=None):
                          "--fgft); comma-separated responses, e.g. "
                          "'heat:3.0,tikhonov,lowpass,wavelets:4' "
                          "(repro/spectral/filters.py::named_responses)")
+    # dynamic (evolving-graph) serving, DESIGN.md §11
+    ap.add_argument("--dynamic", action="store_true",
+                    help="serve an EVOLVING fleet (implies --fgft): per "
+                         "round, stream edge-update batches into the "
+                         "engine (apply_updates), run the drift-triggered "
+                         "refit controller (maintain) off the hot path, "
+                         "and keep serving through versioned hot swaps")
+    ap.add_argument("--update-rounds", type=int, default=5,
+                    help="update/serve rounds in --dynamic mode")
+    ap.add_argument("--churn", type=float, default=0.02,
+                    help="fraction of each graph's edge slots perturbed "
+                         "per round in --dynamic mode")
+    ap.add_argument("--drift-thresholds", default=None,
+                    help="refit-policy thresholds as "
+                         "'refresh,extend,refit' drift scores "
+                         "(default: the RefitPolicy defaults)")
     args = ap.parse_args(argv)
-    if args.filter or args.ragged:
+    if args.filter or args.ragged or args.dynamic:
         args.fgft = True
+    args.policy = None
+    if args.drift_thresholds:
+        try:
+            lo, mid, hi = (float(t) for t in
+                           args.drift_thresholds.split(","))
+        except ValueError:
+            ap.error("--drift-thresholds must be three comma-separated "
+                     "floats: refresh,extend,refit")
+        from repro.dynamic.refit import RefitPolicy
+        args.policy = RefitPolicy(refresh=lo, extend=mid, refit=hi)
     if not args.fgft and args.arch is None:
         ap.error("--arch is required unless --fgft/--filter is given")
     args.tier_map = (parse_tiers(args.tiers) if args.tiers
@@ -149,13 +257,13 @@ def parse_args(argv=None):
 
 class FGFTServeEngine:
     """Batched spectral-filter serving over a fleet of graphs, with
-    anytime quality tiers.
+    anytime quality tiers and (optionally) streaming updates.
 
     One ``ApproxEigenbasis.fit`` factorizes all B Laplacians inside a
     single jit; every ``step`` then filters a (B, R, n) signal block with
     one batched fused-kernel dispatch (DESIGN.md §7).  ``tiers`` maps tier
     names to component fractions; each resolves to the nearest exact stage
-    cut of the staged tables and compiles its OWN jitted program over the
+    cut of the staged tables and binds ONE cached jitted program over the
     truncated (B, S', P) tables, so a draft-tier step costs proportionally
     fewer stages (DESIGN.md §9).  Symmetric fits refit the spectrum per
     tier (Lemma 1 on the prefix basis); general fits reuse the full-fit
@@ -167,70 +275,224 @@ class FGFTServeEngine:
     expectation.  ``sizes`` ((B,) true graph sides) marks a zero-padded
     ragged bucket: the fit is masked to each graph's real coordinates and
     a step's padded signal columns come back zeroed (DESIGN.md §10) —
-    that is how ``RaggedFGFTServeEngine`` builds its per-bucket engines."""
+    that is how ``RaggedFGFTServeEngine`` builds its per-bucket engines.
 
-    def __init__(self, laps: jnp.ndarray, num_transforms: int,
+    DYNAMIC mode (DESIGN.md §11): with ``dynamic=True`` the engine tracks
+    the current Laplacians, accepts streaming deltas via
+    ``apply_updates(graph_id, delta)``, and ``maintain()`` runs the
+    drift-triggered refit controller (dynamic/refit.py) OFF the hot path:
+    it scores drift (Hutchinson, dynamic/drift.py), picks the cheapest
+    restoring action (reuse / Lemma-1 spectrum refresh / warm-start
+    extend / full refit), rebuilds a complete serving version (tier
+    spectra, tier program bindings, filter-bank gains) and swaps it in
+    ATOMICALLY — ``step`` reads ``self._live`` once, so queries always
+    see one consistent version.  Tier/bank programs take the staged
+    tables as arguments, so a swap with unchanged shapes (reuse/refresh)
+    triggers ZERO recompilation.  Per-graph basis versions + drift/refit
+    counters are surfaced in ``stats["dynamic"]`` and persisted through
+    ``save``/``load``."""
+
+    def __init__(self, laps: jnp.ndarray, num_transforms: int = 0,
                  n_iter: int = 3, backend: str = "xla", mesh=None,
                  filters: Optional[str] = None, kind: str = "auto",
                  hint: Optional[str] = None,
                  tiers: Optional[Dict[str, float]] = None,
-                 sizes=None):
+                 sizes=None, dynamic: bool = False, policy=None,
+                 basis=None, drift_baseline=None):
         # deferred import: repro.core builds jnp constants at import time,
         # and launch modules must not touch jax state before mesh setup
-        import functools
         from repro.core import ApproxEigenbasis
         self.backend = backend
+        self.mesh = mesh
+        self._filters = filters
+        self._tier_spec = dict(tiers or {"full": 1.0})
+        self._n_iter = n_iter
         laps = jnp.asarray(laps, jnp.float32)
-        self.basis = ApproxEigenbasis.fit(
-            laps, num_transforms, n_iter=n_iter, mesh=mesh, kind=kind,
-            hint=hint, sizes=sizes)
+        # dynamic engines quantize staged-table shapes so steady-state
+        # refits land on the compiled-program caches (core/staging.py)
+        self._stage_pad = (4, 8) if dynamic and laps.ndim == 3 else None
+        fitted_here = basis is None
+        if basis is None:
+            if num_transforms <= 0:
+                raise ValueError("num_transforms must be positive when "
+                                 "no prefit basis is given")
+            basis = ApproxEigenbasis.fit(
+                laps, num_transforms, n_iter=n_iter, mesh=mesh, kind=kind,
+                hint=hint, sizes=sizes, stage_pad=self._stage_pad)
         if mesh is not None:
-            self.basis = self.basis.shard(mesh)
-        # one jitted program per tier serves all B graphs per dispatch;
-        # the truncated staged tables are closure constants so the whole
-        # filter fuses at each tier's stage count
-        full_stages = int(self.basis.fwd.num_stages)
-        self.tiers: Dict[str, dict] = {}
-        self._tier_fns = {}
-        for name, frac in (tiers or {"full": 1.0}).items():
-            n_stages, n_comp = self.basis.select_tier(fraction=frac)
+            basis = basis.shard(mesh)
+        self._g0 = basis.num_transforms
+        self._kind = basis.kind
+        if basis.sizes is None:
+            self._pad_valid = None
+        else:
+            self._pad_valid = jnp.asarray(
+                np.arange(basis.n) < np.asarray(basis.sizes)[..., None])
+        self.stats: Dict[str, Any] = {"steps": {}}
+        self.dynamic = bool(dynamic)
+        self._live = None
+        if self.dynamic and basis.batched:
+            pinned = basis.info.get("stage_pad")
+            if fitted_here or not pinned:
+                # pin the shape quantization to THIS fit's depth: refit
+                # chains vary with graph content, so a fixed per-chunk
+                # quantum + structural-max width makes every subsequent
+                # refit land on the SAME (B, S, P) tables — the whole
+                # maintenance/serving program suite stays compiled
+                # across swaps.  A basis that already carries a pin (the
+                # load path) keeps it: re-deriving the quantum from its
+                # PADDED depth would inflate the tables ~1.5x per
+                # save/load cycle
+                basis = self._repin(basis)
+            else:
+                self._stage_pad = tuple(int(q) for q in pinned)
+        self._install(basis, laps)
+        # tracked Laplacians: the update/refit substrate in dynamic mode,
+        # and what save() persists so load() can rebuild tier spectra
+        # without refitting (small next to the staged tables)
+        self._laps_host = np.array(laps, np.float32)
+        if self.dynamic:
+            from repro.dynamic.refit import RefitController, RefitPolicy
+            self.controller = RefitController(policy or RefitPolicy())
+            nb = laps.shape[0] if basis.batched else 1
+            self.versions = np.zeros(nb, np.int64)
+            self._dirty = np.zeros(nb, bool)
+            self._updates = 0
+            # drift scores are cached per update revision: idle ticks
+            # with pending-but-unchanged updates reuse the last probe
+            # pass instead of recomputing an identical estimate
+            self._update_rev = 0
+            self._scored_rev = -1
+            self._last_drift = np.zeros(nb)
+            if drift_baseline is not None:
+                # a restored engine hands its persisted baseline straight
+                # through — estimating one here would be thrown away
+                self._baseline = np.atleast_1d(
+                    np.asarray(drift_baseline, np.float64))
+            elif basis.objective is not None:
+                from repro.dynamic.drift import relative_objective
+                self._baseline = relative_objective(basis.objective,
+                                                    laps)
+            else:
+                # a refresh-swapped basis carries no exact objective;
+                # anchor the baseline stochastically instead
+                from repro.dynamic.drift import estimate_rel_residual
+                p = self.controller.policy
+                self._baseline = np.atleast_1d(estimate_rel_residual(
+                    basis, self._laps_host, num_probes=p.num_probes,
+                    seed=p.seed))
+            self._refresh_dynamic_stats(np.zeros(nb))
+
+    # -- the versioned hot swap (DESIGN.md §11) ----------------------------
+
+    def _repin(self, basis):
+        """Repack a batched basis with a depth quantum pinned to its own
+        staged depth (see __init__); idempotent when already pinned."""
+        from dataclasses import replace as _replace
+        from repro.core.staging import (DEFAULT_NUM_CHUNKS,
+                                        pack_g_batch_pair,
+                                        pack_t_batch_pair)
+        s0 = int(basis.fwd.num_stages)
+        # depth pin: 1.5x the observed per-chunk depth — refit chains
+        # vary tens of percent with graph content (most under topology
+        # churn); a chunk overflowing the pin costs one recompile.
+        # width pin: the STRUCTURAL maximum (disjoint pairs bound a
+        # G-stage at n/2 entries, a T-stage at n), so the width can
+        # never overflow and every refit lands on identical tables.
+        q = max(-(-3 * s0 // (2 * DEFAULT_NUM_CHUNKS)), 1)
+        w_max = basis.n // 2 if basis.kind == "sym" else basis.n
+        pad = (q, max(8 * -(-w_max // 8), 8))
+        if self._stage_pad == pad:
+            return basis
+        self._stage_pad = pad
+        cuts = (sorted(set(np.asarray(basis.fwd.cuts)[:, 1].tolist()))
+                if basis.fwd.cuts is not None else None)
+        if basis.kind == "sym":
+            fwd, bwd = pack_g_batch_pair(basis.factors, basis.n,
+                                         cuts=cuts, pad=pad)
+        else:
+            fwd, bwd = pack_t_batch_pair(basis.factors, basis.n,
+                                         cuts=cuts, pad=pad)
+        return _replace(basis, fwd=fwd, bwd=bwd,
+                        info={**basis.info, "stage_pad": pad})
+
+    def warmup(self, signals: jnp.ndarray):
+        """Compile the full serving + maintenance program suite up front
+        (tier programs, bank, drift scorer, Lemma-1 refresh), so the
+        first real update round runs at steady-state cost."""
+        for name in self._live.tiers:
+            y = self.step(signals, tier=name)
+            self.stats["steps"][name] -= 1      # warmup doesn't count
+        if self._live.bank is not None:
+            y = self.step_bank(signals)
+        if self.dynamic:
+            self.drift()
+            if self._kind == "sym":
+                from repro.dynamic.refit import lemma1_refresh
+                jax.block_until_ready(lemma1_refresh(
+                    self._live.basis, jnp.asarray(self._laps_host)))
+        return jax.block_until_ready(y)
+
+    def _install(self, basis, laps):
+        """Build a COMPLETE serving version (per-tier refit spectra,
+        cached program bindings, filter-bank gains) and swap it in with a
+        single attribute store.  ``laps``: the Laplacians the tier
+        spectra refit against — the fit stack at construction, the
+        updated stack on a dynamic swap."""
+        full_stages = int(basis.fwd.num_stages)
+        tiers: Dict[str, dict] = {}
+        fns: Dict[str, Any] = {}
+        for name, frac in self._tier_spec.items():
+            n_stages, n_comp = basis.select_tier(fraction=frac)
             cut = None if n_stages >= full_stages else n_stages
-            self.tiers[name] = {
-                "num_stages": n_stages,
-                "num_transforms": n_comp,
-                "spectrum": self._tier_spectrum(laps, cut),
-            }
-            self._tier_fns[name] = jax.jit(functools.partial(
-                lambda x, d, ns: self.basis.project(
-                    x, h=lambda _: d, backend=self.backend, num_stages=ns),
-                ns=cut))
+            if cut is None or basis.kind != "sym":
+                spec = basis.spectrum
+            else:
+                from repro.dynamic.refit import prefix_spectrum
+                spec = prefix_spectrum(basis, laps, cut)
+            tiers[name] = {"num_stages": n_stages,
+                           "num_transforms": n_comp, "spectrum": spec}
+            fns[name] = _tier_program(basis.kind, basis.batched,
+                                      self.backend, cut, basis.n)
+        bank = bank_gains = bank_fn = None
+        if self._filters:
+            from repro.spectral import SpectralFilterBank, named_responses
+            # gains are recomputed from the (possibly refreshed) spectrum
+            # on every swap; the serving program itself is shape-cached
+            bank = SpectralFilterBank(basis, named_responses(self._filters))
+            bank_gains = bank.gains()
+            bank_fn = _bank_program(basis.kind, basis.batched,
+                                    self.backend, basis.n)
+        version = 0 if self._live is None else self._live.version + 1
+        self._live = _LiveVersion(basis=basis, fwd=_tables(basis.fwd),
+                                  bwd=_tables(basis.bwd), tiers=tiers,
+                                  fns=fns, bank=bank,
+                                  bank_gains=bank_gains, bank_fn=bank_fn,
+                                  version=version)
         # default tier = highest quality in the map, whatever its name
         self.default_tier = max(
-            self.tiers, key=lambda k: self.tiers[k]["num_transforms"])
-        self.stats = {"steps": {name: 0 for name in self.tiers},
-                      "tiers": {name: {k: t[k] for k in
-                                       ("num_stages", "num_transforms")}
-                                for name, t in self.tiers.items()}}
-        self.bank = None
-        if filters:
-            from repro.spectral import SpectralFilterBank, named_responses
-            self.bank = SpectralFilterBank(self.basis,
-                                           named_responses(filters))
-            # the whole bank in one fused dispatch: analysis runs once per
-            # signal block, every response reuses its coefficients
-            # (kernels/spectral.py; DESIGN.md §8)
-            self._bank_step = jax.jit(
-                lambda x: self.bank.apply(x, backend=self.backend))
+            tiers, key=lambda k: tiers[k]["num_transforms"])
+        for name in tiers:
+            self.stats["steps"].setdefault(name, 0)
+        self.stats["tiers"] = {name: {k: t[k] for k in
+                                      ("num_stages", "num_transforms")}
+                               for name, t in tiers.items()}
 
-    def _tier_spectrum(self, laps: jnp.ndarray,
-                       num_stages: Optional[int]) -> jnp.ndarray:
-        """Spectrum served by a tier: Lemma-1 refit on the prefix basis
-        for the symmetric family (diag(U'^T L U') per graph), the full-fit
-        spectrum otherwise."""
-        if num_stages is None or self.basis.kind != "sym":
-            return self.basis.spectrum
-        u = self.basis.to_dense(num_stages=num_stages)
-        return jnp.einsum("...ji,...jk,...ki->...i", u, laps, u)
+    @property
+    def basis(self):
+        """The currently served basis (read-only snapshot)."""
+        return self._live.basis
+
+    @property
+    def tiers(self) -> Dict[str, dict]:
+        """Tier geometry + served spectra of the live version."""
+        return self._live.tiers
+
+    @property
+    def bank(self):
+        return self._live.bank
+
+    # -- serving hot path --------------------------------------------------
 
     def step(self, signals: jnp.ndarray, h=None,
              tier: Optional[str] = None) -> jnp.ndarray:
@@ -238,18 +500,284 @@ class FGFTServeEngine:
         the requested quality tier (default: the highest-quality tier in
         the map, whatever its name).  ``h`` maps the tier's (refit) graph
         frequencies to gains."""
+        live = self._live
         tier = tier if tier is not None else self.default_tier
-        t = self.tiers[tier]
+        t = live.tiers[tier]
         d = t["spectrum"] if h is None else h(t["spectrum"])
+        if h is not None and self._pad_valid is not None:
+            # h(0) need not be 0 (heat/Tikhonov map 0 -> 1): unmasked
+            # gains would leak pad columns of x into the output
+            d = jnp.where(self._pad_valid, d, 0.0)
         self.stats["steps"][tier] += 1
-        return self._tier_fns[tier](signals, d)
+        return live.fns[tier](live.fwd, live.bwd, d, signals)
 
     def step_bank(self, signals: jnp.ndarray) -> jnp.ndarray:
         """All F bank responses on every graph: (B, R, n) ->
-        (B, F, R, n), one fused dispatch (full tier)."""
-        if self.bank is None:
+        (B, F, R, n), one fused dispatch (full tier; DESIGN.md §8)."""
+        live = self._live
+        if live.bank is None:
             raise ValueError("engine was built without --filter responses")
-        return self._bank_step(signals)
+        return live.bank_fn(live.fwd, live.bwd, live.bank_gains, signals)
+
+    # -- streaming updates + drift-triggered refits (DESIGN.md §11) --------
+
+    def _require_dynamic(self):
+        if not self.dynamic:
+            raise ValueError("engine was built without dynamic=True")
+
+    def _graph_size(self, graph_id: int) -> int:
+        basis = self._live.basis
+        if basis.sizes is None:
+            return basis.n
+        sizes = np.asarray(basis.sizes)
+        return int(sizes[graph_id]) if basis.batched else int(sizes)
+
+    def apply_updates(self, graph_id: int, delta):
+        """Absorb one update batch for graph ``graph_id`` into the
+        tracked Laplacian.  ``delta``: an ``UpdateBatch`` (edge
+        insert/delete/reweight list, dynamic/stream.py) or a dense
+        Laplacian delta ((n_i, n_i) arrays from a smaller ragged graph
+        are embedded at the leading block).  The SERVED basis is
+        untouched until the next ``maintain()`` decides an action — the
+        hot path never pays for refit work."""
+        self._require_dynamic()
+        from repro.dynamic.stream import UpdateBatch, laplacian_delta
+        basis = self._live.basis
+        n = basis.n
+        size = self._graph_size(graph_id)
+        if isinstance(delta, UpdateBatch):
+            dl = laplacian_delta(delta, size)   # bounds-checked at size
+        else:
+            dl = np.asarray(delta, np.float32)
+            if dl.shape[0] > size:
+                raise ValueError(f"delta side {dl.shape[0]} exceeds graph "
+                                 f"{graph_id}'s size {size}")
+        if dl.shape[0] < n:                     # embed into the bucket
+            pad = np.zeros((n, n), np.float32)
+            pad[:dl.shape[0], :dl.shape[1]] = dl
+            dl = pad
+        if basis.batched:
+            self._laps_host[graph_id] += dl
+        else:
+            if graph_id != 0:
+                raise ValueError("unbatched engine serves graph 0 only")
+            self._laps_host += dl
+        self._dirty[graph_id] = True
+        self._updates += 1
+        self._update_rev += 1
+
+    def drift(self) -> np.ndarray:
+        """Per-graph drift scores of the LIVE version on the tracked
+        (updated) Laplacians: Hutchinson relative residual minus the
+        baseline recorded at the last structural (re)fit, floored at 0."""
+        self._require_dynamic()
+        from repro.dynamic.drift import estimate_rel_residual
+        p = self.controller.policy
+        est = estimate_rel_residual(self._live.basis, self._laps_host,
+                                    num_probes=p.num_probes, seed=p.seed)
+        return np.maximum(np.atleast_1d(est) - self._baseline, 0.0)
+
+    def maintain(self) -> dict:
+        """One OFF-hot-path controller tick: score drift, pick the
+        cheapest restoring action, execute it as a cached compiled
+        program, and atomically swap the new serving version.  Returns
+        {action, drift, post_drift, versions, swap_version}."""
+        self._require_dynamic()
+        from repro.dynamic.refit import Action
+        if not self._dirty.any():
+            zero = np.zeros_like(self._baseline)
+            self.controller.record(Action.REUSE, zero)  # idle tick counts
+            self._refresh_dynamic_stats(zero)
+            return {"action": Action.REUSE.value, "drift": zero,
+                    "post_drift": zero,
+                    "versions": self.versions.copy(),
+                    "swap_version": self._live.version}
+        if self._scored_rev != self._update_rev:
+            self._last_drift = self.drift()
+            self._scored_rev = self._update_rev
+        drift = self._last_drift
+        # the general family has no cheap spectrum refresh (Lemma 2 needs
+        # a dense solve per graph) — the controller escalates for it
+        action = self.controller.decide(
+            drift, can_refresh=self._kind == "sym")
+        post = drift
+        if action is not Action.REUSE:
+            self._execute(action)
+            bump = self._dirty.copy()
+            if action in (Action.EXTEND, Action.REFIT):
+                bump[:] = True      # every chain in the batch was regrown
+            self.versions[bump] += 1
+            self._dirty[:] = False
+            post = self.drift()
+            self._last_drift = post
+            self._scored_rev = self._update_rev
+        self.controller.record(action, post)
+        self._refresh_dynamic_stats(post)
+        return {"action": action.value, "drift": drift,
+                "post_drift": post, "versions": self.versions.copy(),
+                "swap_version": self._live.version}
+
+    def _execute(self, action):
+        """Run one refit action through its cached compiled program and
+        install the resulting serving version."""
+        from dataclasses import replace as _replace
+        from repro.core import ApproxEigenbasis
+        from repro.dynamic.refit import Action, lemma1_refresh
+        basis = self._live.basis
+        laps = jnp.asarray(self._laps_host)
+        if self.mesh is not None and basis.batched:
+            from repro.runtime.sharding import matrix_batch_sharding
+            laps = jax.device_put(
+                laps, matrix_batch_sharding(self.mesh, laps.ndim,
+                                            batch=laps.shape[0]))
+        if action is Action.REFRESH:
+            # spectrum-only: the factor chain (and its staged tables, and
+            # the baseline anchored at the last structural fit) survive
+            new_spec = lemma1_refresh(basis, laps)
+            basis = _replace(basis, spectrum=new_spec, objective=None)
+        elif action is Action.EXTEND:
+            p = self.controller.policy
+            extra = max(int(round(p.extend_fraction * self._g0)), 1)
+            basis = basis.extend(laps, basis.num_transforms + extra,
+                                 n_iter=0, mesh=self.mesh)
+        elif action is Action.REFIT:
+            # keep the fit's RESOLVED greedy criterion: refitting under
+            # the default score would silently switch the criterion
+            # mid-stream (the bug class the score persistence in
+            # core/eigenbasis.py save/load exists to prevent)
+            score = (basis.info.get("score") if self._kind == "sym"
+                     else None)
+            basis = ApproxEigenbasis.fit(
+                laps, self._g0, n_iter=self._n_iter, kind=self._kind,
+                score=score, sizes=basis.sizes, mesh=self.mesh,
+                stage_pad=self._stage_pad)
+        else:
+            raise ValueError(f"not an executable action: {action}")
+        if self.mesh is not None:
+            basis = basis.shard(self.mesh)
+        if action in (Action.EXTEND, Action.REFIT):
+            # re-baseline at the new structural fit (exact objective)
+            from repro.dynamic.drift import relative_objective
+            self._baseline = relative_objective(basis.objective, laps)
+        self._install(basis, laps)
+
+    def _refresh_dynamic_stats(self, last_drift):
+        self.stats["dynamic"] = {
+            "updates": int(self._updates) if hasattr(self, "_updates")
+            else 0,
+            "versions": self.versions.tolist(),
+            "swap_version": self._live.version,
+            "actions": dict(self.controller.counts),
+            "last_drift": np.asarray(last_drift).tolist(),
+        }
+
+    # -- persistence (checkpoint/store.py; DESIGN.md §6/§11) ---------------
+
+    def save(self, directory, step: int = 0):
+        """Persist the live basis + serving state through the atomic
+        checkpoint store: the tracked Laplacians ride as an extra state
+        leaf, per-graph versions and drift/refit counters as metadata,
+        and the engine swap counter as the basis version."""
+        from dataclasses import replace as _replace
+        live = self._live
+        basis = _replace(live.basis,
+                         info={**live.basis.info,
+                               "version": int(live.version)})
+        extra_meta: Dict[str, Any] = {
+            "serve": {"tier_spec": self._tier_spec,
+                      "filters": self._filters,
+                      "n_iter": self._n_iter,
+                      "num_transforms": int(self._g0)}}
+        extra_state = {"laps": jnp.asarray(self._laps_host)}
+        if self.dynamic:
+            extra_meta["dynamic"] = {
+                "versions": self.versions.tolist(),
+                "updates": int(self._updates),
+                "baseline": np.asarray(self._baseline).tolist(),
+                "controller": self.controller.state_dict(),
+                # pending-maintenance flags: a restored engine must not
+                # silently serve a basis whose updates were never scored
+                "dirty": self._dirty.tolist(),
+            }
+        return basis.save(directory, step, extra_state=extra_state,
+                          extra_metadata=extra_meta)
+
+    @classmethod
+    def load(cls, directory, step: Optional[int] = None, *,
+             laps=None, backend: str = "xla", mesh=None,
+             filters: Optional[str] = None,
+             tiers: Optional[Dict[str, float]] = None,
+             dynamic: Optional[bool] = None, policy=None
+             ) -> "FGFTServeEngine":
+        """Rebuild a serving engine from a checkpoint WITHOUT refitting.
+
+        Dynamic engines restore their tracked Laplacians, per-graph
+        versions, baselines and controller counters; checkpoints written
+        before the dynamic subsystem (or by plain ``ApproxEigenbasis.
+        save``) restore with every version at 0 and fresh counters —
+        loading them must not raise.  ``laps`` overrides the tracked
+        Laplacians (required for pre-dynamic checkpoints, which carry
+        none)."""
+        from repro.checkpoint import (latest_step, read_metadata,
+                                      restore_checkpoint)
+        from repro.core import ApproxEigenbasis
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint in {directory}")
+        basis = ApproxEigenbasis.load(directory, step)
+        meta = read_metadata(directory, step)
+        serve_meta = meta.get("serve", {})
+        dyn_meta = meta.get("dynamic")
+        if dynamic is None:
+            dynamic = dyn_meta is not None
+        if laps is None:
+            shape = ((int(basis.spectrum.shape[0]), basis.n, basis.n)
+                     if basis.batched else (basis.n, basis.n))
+            try:
+                state, _, _ = restore_checkpoint(
+                    directory, {"laps": jnp.zeros(shape, jnp.float32)},
+                    step=step)
+            except KeyError as exc:
+                raise ValueError(
+                    "checkpoint carries no tracked Laplacians (written "
+                    "by plain ApproxEigenbasis.save, not engine.save); "
+                    "pass laps= explicitly") from exc
+            laps = state["laps"]
+        engine = cls(laps, n_iter=serve_meta.get("n_iter", 3),
+                     backend=backend, mesh=mesh,
+                     filters=filters if filters is not None
+                     else serve_meta.get("filters"),
+                     tiers=tiers if tiers is not None
+                     else serve_meta.get("tier_spec"),
+                     dynamic=dynamic, policy=policy, basis=basis,
+                     drift_baseline=(dyn_meta or {}).get("baseline"))
+        from dataclasses import replace as _replace
+        engine._live = _replace(
+            engine._live, version=int(basis.info.get("version", 0)))
+        # the ORIGINAL fitted budget, not the (possibly extended) current
+        # component count: REFIT clamps back to it and EXTEND budgets are
+        # fractions of it — re-anchoring at the grown count would let
+        # chains grow without bound across save/load cycles
+        engine._g0 = int(serve_meta.get("num_transforms", engine._g0))
+        if engine.dynamic:
+            dyn = dyn_meta or {}
+            nb = engine.versions.shape[0]
+            versions = dyn.get("versions")
+            if versions is not None:
+                engine.versions = np.asarray(versions, np.int64)
+            else:
+                engine.versions = np.zeros(nb, np.int64)
+            engine._updates = int(dyn.get("updates", 0))
+            if dyn.get("dirty") is not None:
+                engine._dirty = np.asarray(dyn["dirty"], bool)
+                if engine._dirty.any():
+                    engine._update_rev += 1   # force a fresh drift pass
+            engine.controller.load_state_dict(dyn.get("controller", {}))
+            engine._refresh_dynamic_stats(
+                np.zeros_like(engine._baseline))
+        return engine
 
 
 def bucket_width(n: int, min_width: int = 8) -> int:
@@ -291,7 +819,8 @@ class RaggedFGFTServeEngine:
                  filters: Optional[str] = None, kind: str = "auto",
                  hint: Optional[str] = None,
                  tiers: Optional[Dict[str, float]] = None,
-                 min_width: int = 8):
+                 min_width: int = 8, dynamic: bool = False, policy=None,
+                 _engines: Optional[Dict[int, FGFTServeEngine]] = None):
         from repro.core import pad_ragged
         laps = [np.asarray(lap, np.float32) for lap in laps]
         if not laps:
@@ -300,6 +829,7 @@ class RaggedFGFTServeEngine:
         self._denoms = np.asarray([max(float((lap * lap).sum()), 1e-30)
                                    for lap in laps])
         self.widths = [bucket_width(s, min_width) for s in self.sizes]
+        self.dynamic = bool(dynamic)
         # bucket -> positions in request order (stable within a bucket)
         self.bucket_of: Dict[int, list] = {}
         for pos, w in enumerate(self.widths):
@@ -312,13 +842,17 @@ class RaggedFGFTServeEngine:
             alpha = num_transforms / (w_max * np.log2(w_max))
             return max(int(round(alpha * w * np.log2(w))), 1)
 
+        if _engines is not None:               # load() restores prefit
+            self.engines = _engines
+            return
         self.engines: Dict[int, FGFTServeEngine] = {}
         for w, members in sorted(self.bucket_of.items()):
             stack, sizes = pad_ragged([laps[p] for p in members], width=w)
             self.engines[w] = FGFTServeEngine(
                 stack, scaled_g(w), n_iter=n_iter, backend=backend,
                 mesh=mesh, filters=filters, kind=kind, hint=hint,
-                tiers=tiers, sizes=None if np.all(sizes == w) else sizes)
+                tiers=tiers, sizes=None if np.all(sizes == w) else sizes,
+                dynamic=dynamic, policy=policy)
 
     def __len__(self) -> int:
         return len(self.sizes)
@@ -402,6 +936,108 @@ class RaggedFGFTServeEngine:
     def stats(self) -> dict:
         return {w: eng.stats for w, eng in self.engines.items()}
 
+    # -- streaming updates (DESIGN.md §11): per-bucket hot swaps -----------
+
+    def _locate(self, graph_id: int) -> tuple:
+        if not 0 <= graph_id < len(self.sizes):
+            raise ValueError(f"graph_id {graph_id} not in fleet of "
+                             f"{len(self.sizes)}")
+        w = self.widths[graph_id]
+        return w, self.bucket_of[w].index(graph_id)
+
+    def apply_updates(self, graph_id: int, delta):
+        """Route one update batch to the graph's bucket engine (request-
+        order ``graph_id``; the bucket keeps serving its OTHER graphs on
+        the old version until its own ``maintain`` swap)."""
+        w, row = self._locate(graph_id)
+        self.engines[w].apply_updates(row, delta)
+
+    def drift(self) -> np.ndarray:
+        """Per-graph drift scores, request order."""
+        out = np.zeros(len(self.sizes))
+        for w, members in self.bucket_of.items():
+            d = self.engines[w].drift()
+            for row, pos in enumerate(members):
+                out[pos] = d[row]
+        return out
+
+    def maintain(self) -> dict:
+        """One controller tick per bucket; buckets refit and swap
+        independently (a burst of updates to small graphs never blocks
+        the big bucket's serving version)."""
+        return {w: eng.maintain() for w, eng in sorted(
+            self.engines.items())}
+
+    @property
+    def versions(self) -> np.ndarray:
+        """Per-graph basis versions, request order."""
+        out = np.zeros(len(self.sizes), np.int64)
+        for w, members in self.bucket_of.items():
+            v = self.engines[w].versions
+            for row, pos in enumerate(members):
+                out[pos] = v[row]
+        return out
+
+    # -- persistence: one checkpoint per bucket + a router manifest --------
+
+    def save(self, directory, step: int = 0):
+        """Persist every bucket engine (basis + dynamic state) plus the
+        router geometry, so ``load`` rebuilds the fleet without
+        refitting."""
+        import json
+        directory = pathlib.Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        for w, eng in self.engines.items():
+            eng.save(directory / f"bucket_{w:05d}", step)
+        # atomic manifest write: the bucket checkpoints survive a crashed
+        # writer (DESIGN.md §6), so the router geometry must too
+        import os
+        tmp = directory / "router.json.tmp"
+        tmp.write_text(json.dumps(
+            {"sizes": self.sizes, "widths": self.widths, "step": step}))
+        os.replace(tmp, directory / "router.json")
+        return directory
+
+    @classmethod
+    def load(cls, directory, step: Optional[int] = None, *,
+             backend: str = "xla", mesh=None,
+             filters: Optional[str] = None,
+             tiers: Optional[Dict[str, float]] = None,
+             dynamic: Optional[bool] = None, policy=None
+             ) -> "RaggedFGFTServeEngine":
+        import json
+        directory = pathlib.Path(directory)
+        manifest = json.loads((directory / "router.json").read_text())
+        if step is None:
+            step = int(manifest["step"])
+        engines: Dict[int, FGFTServeEngine] = {}
+        for w in sorted({int(x) for x in manifest["widths"]}):
+            engines[w] = FGFTServeEngine.load(
+                directory / f"bucket_{w:05d}", step, backend=backend,
+                mesh=mesh, filters=filters, tiers=tiers, dynamic=dynamic,
+                policy=policy)
+        # rebuild request-order geometry from the restored laps (pads are
+        # zero, so per-graph denominators crop for free)
+        laps = []
+        for pos, w in enumerate(manifest["widths"]):
+            row = [p for p in range(len(manifest["widths"]))
+                   if manifest["widths"][p] == w].index(pos)
+            n_i = int(manifest["sizes"][pos])
+            lap = np.asarray(engines[int(w)]._laps_host[row],
+                             np.float32)[:n_i, :n_i]
+            laps.append(lap)
+        router = cls(laps, dynamic=any(e.dynamic
+                                       for e in engines.values()),
+                     _engines=engines)
+        # restore the PERSISTED routing geometry: the constructor
+        # recomputed widths with the default min_width, which diverges
+        # for routers built with a custom one
+        router.widths = [int(w) for w in manifest["widths"]]
+        router.bucket_of = {}
+        for pos, w in enumerate(router.widths):
+            router.bucket_of.setdefault(w, []).append(pos)
+        return router
+
 
 def serve_fgft(args) -> dict:
     """Build B graph Laplacians, fit them in one jit, serve filter steps
@@ -409,6 +1045,8 @@ def serve_fgft(args) -> dict:
     from repro.core.fgft import laplacian
     from repro.graphs import community_graph, directed_variant
 
+    if args.dynamic:
+        return serve_fgft_dynamic(args)
     if args.ragged:
         return serve_fgft_ragged(args)
     b, n = args.graphs, args.graph_n
@@ -555,6 +1193,101 @@ def serve_fgft_ragged(args) -> dict:
     return {"rel_error": rel, "transforms_per_s": served / dt,
             "sizes": sizes, "buckets": sorted(router.engines),
             "stats": router.stats}
+
+
+def serve_fgft_dynamic(args) -> dict:
+    """Serve an EVOLVING fleet (DESIGN.md §11): per round, apply one
+    edge-update batch per graph, run the drift-triggered maintenance
+    tick (off the hot path), then keep answering filter queries through
+    the hot-swapped basis versions.  Works for both the uniform-size
+    engine and the ragged router (--ragged)."""
+    from repro.dynamic import GraphStream
+    from repro.graphs import (community_graph, directed_variant,
+                              edge_perturbation)
+
+    b = args.graphs
+    if args.ragged:
+        sizes = [args.size_list[i % len(args.size_list)] for i in range(b)]
+    else:
+        sizes = [args.graph_n] * b
+    adjs = [community_graph(n, seed=s) for s, n in enumerate(sizes)]
+    if args.directed:
+        adjs = [directed_variant(a, seed=s) for s, a in enumerate(adjs)]
+    stream = GraphStream(adjs, directed=args.directed)
+    laps = stream.laplacians()
+    kind = "general" if args.directed else "auto"
+    mesh = make_local_mesh()
+    t0 = time.time()
+    if args.ragged:
+        engine = RaggedFGFTServeEngine(
+            laps, args.transforms, backend=args.backend, mesh=mesh,
+            kind=kind, filters=args.filter, tiers=args.tier_map,
+            dynamic=True, policy=args.policy)
+    else:
+        g = args.transforms or int(2 * args.graph_n
+                                   * np.log2(args.graph_n))
+        engine = FGFTServeEngine(
+            jnp.asarray(np.stack(laps)), g, backend=args.backend,
+            mesh=mesh, kind=kind, filters=args.filter,
+            tiers=args.tier_map, dynamic=True, policy=args.policy)
+    fit_s = time.time() - t0
+    print(f"[fgft] fitted evolving fleet of {b} graphs in {fit_s:.1f}s; "
+          f"streaming {args.update_rounds} rounds at churn {args.churn}")
+    rng = np.random.default_rng(args.seed)
+
+    def signal_block():
+        if args.ragged:
+            return [rng.standard_normal((args.signals, n)).astype(
+                np.float32) for n in sizes]
+        return jnp.asarray(rng.standard_normal(
+            (b, args.signals, len(laps[0]))).astype(np.float32))
+
+    lowpass = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
+    ys = engine.step(signal_block(), lowpass)    # warmup/compile
+    actions = []
+    t_serve = t_maintain = 0.0
+    for rnd in range(args.update_rounds):
+        for gid in range(b):
+            budget = max(int(args.churn * sizes[gid]
+                             * (sizes[gid] - 1) / 2), 1)
+            batch = edge_perturbation(
+                stream.adjs[gid], budget,
+                seed=args.seed + 1000 * (rnd + 1) + gid,
+                directed=args.directed)
+            dl = stream.apply(gid, batch)
+            engine.apply_updates(gid, dl)
+        t0 = time.time()
+        res = engine.maintain()
+        t_maintain += time.time() - t0
+        if args.ragged:
+            acts = sorted({r["action"] for r in res.values()})
+            actions.append("+".join(acts))
+            drift_max = max(float(np.max(r["post_drift"]))
+                            for r in res.values())
+        else:
+            actions.append(res["action"])
+            drift_max = float(np.max(res["post_drift"]))
+        t0 = time.time()
+        for _ in range(args.filter_steps):
+            ys = engine.step(signal_block(), lowpass)
+        jax.block_until_ready(ys if not args.ragged else ys[0])
+        t_serve += time.time() - t0
+        # maintain() already scored post-action drift; an extra fleet-
+        # wide probe pass here would just distort the serve/maintain
+        # split it prints
+        print(f"[fgft]   round {rnd}: action={actions[-1]}, max drift "
+              f"{drift_max:.4f}, versions {engine.versions.tolist()}")
+    served = args.update_rounds * args.filter_steps * b
+    print(f"[fgft] served {served} graph-filter requests across "
+          f"{args.update_rounds} update rounds "
+          f"(serve {t_serve:.2f}s, maintain {t_maintain:.2f}s) "
+          f"[{args.backend}]")
+    dyn_stats = (engine.stats["dynamic"] if not args.ragged
+                 else {w: s["dynamic"] for w, s in engine.stats.items()})
+    print(f"[fgft] dynamic stats: {dyn_stats}")
+    return {"actions": actions, "versions": engine.versions.tolist(),
+            "serve_s": t_serve, "maintain_s": t_maintain,
+            "stats": dyn_stats}
 
 
 class ServeEngine:

@@ -76,3 +76,41 @@ def test_manager_restore_latest(tmp_path):
     assert step == 42 and meta["arch"] == "x"
     np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
                                np.asarray(st["params"]["w"]))
+
+
+def test_read_metadata_without_restoring(tmp_path):
+    from repro.checkpoint import read_metadata
+    save_checkpoint(tmp_path, 4, _state(2), metadata={"serve": {"x": 1}})
+    save_checkpoint(tmp_path, 9, _state(3), metadata={"serve": {"x": 2}})
+    assert read_metadata(tmp_path)["serve"]["x"] == 2       # latest
+    assert read_metadata(tmp_path, 4)["serve"]["x"] == 1    # explicit
+    with pytest.raises(FileNotFoundError):
+        read_metadata(tmp_path / "nope")
+
+
+def test_eigenbasis_version_roundtrip(tmp_path):
+    """Basis version (DESIGN.md §11) survives save/load; extra state
+    leaves and extra metadata ride alongside without disturbing the
+    basis restore."""
+    from repro.checkpoint import read_metadata, restore_checkpoint
+    from repro.core import ApproxEigenbasis, laplacian
+    from repro.graphs import community_graph
+    laps = np.stack([laplacian(community_graph(12, seed=s))
+                     for s in range(2)])
+    basis = ApproxEigenbasis.fit(jnp.asarray(laps), 24, n_iter=1)
+    basis.info["version"] = 7
+    basis.save(tmp_path, step=3,
+               extra_state={"laps": jnp.asarray(laps)},
+               extra_metadata={"dynamic": {"versions": [7, 7]}})
+    loaded = ApproxEigenbasis.load(tmp_path)
+    assert loaded.info["version"] == 7
+    meta = read_metadata(tmp_path, 3)
+    assert meta["dynamic"]["versions"] == [7, 7]
+    state, _, _ = restore_checkpoint(
+        tmp_path, {"laps": jnp.zeros_like(jnp.asarray(laps))}, step=3)
+    np.testing.assert_allclose(np.asarray(state["laps"]), laps)
+    with pytest.raises(ValueError, match="collides"):
+        basis.save(tmp_path, step=5,
+                   extra_state={"factors": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="eigenbasis"):
+        basis.save(tmp_path, step=5, extra_metadata={"eigenbasis": {}})

@@ -1,0 +1,438 @@
+"""Dynamic-graph subsystem (DESIGN.md §11): streaming update tracking,
+Hutchinson drift scoring, the refit-policy state machine, and versioned
+hot-swap serving with checkpoint round-trips."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ApproxEigenbasis, laplacian
+from repro.dynamic import (Action, GraphStream, RefitController,
+                           RefitPolicy, UpdateBatch, apply_update,
+                           delta_adjacency, drift_score,
+                           estimate_rel_residual, exact_rel_residual,
+                           laplacian_delta, lemma1_refresh,
+                           make_update_batch, merge_batches)
+from repro.graphs import (community_graph, edge_perturbation, erdos_renyi,
+                          weight_jitter)
+
+
+def _sym_laps(b, n, seed=0):
+    return np.stack([laplacian(erdos_renyi(n, 0.3, seed=seed + s))
+                     for s in range(b)])
+
+
+def _perturbed(laps, rows, num_edges, seed=7):
+    """Copy of ``laps`` with a topology perturbation applied to the
+    given rows (via the adjacency so the result stays a Laplacian)."""
+    out = laps.copy()
+    for r in rows:
+        adj = np.diag(np.diag(laps[r])) - laps[r]
+        np.fill_diagonal(adj, 0.0)
+        batch = edge_perturbation(adj, num_edges, seed=seed + r)
+        out[r] = laplacian(apply_update(adj, batch))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# stream.py: update batches compose exactly
+# ---------------------------------------------------------------------------
+
+
+def test_update_batch_validation():
+    with pytest.raises(ValueError, match="off-diagonal"):
+        make_update_batch([0], [0], [1.0])
+    with pytest.raises(ValueError, match="one length"):
+        make_update_batch([0, 1], [2], [1.0])
+    with pytest.raises(ValueError, match=">= n"):
+        laplacian_delta(make_update_batch([0], [9], [1.0]), 4)
+    b = make_update_batch([0, 1], [2, 3], [1.0, -0.5])
+    assert b.num_edges == 2 and b.symmetric
+
+
+def test_laplacian_delta_composes():
+    adj = community_graph(12, seed=0)
+    batch = edge_perturbation(adj, 5, seed=1)
+    np.testing.assert_allclose(
+        laplacian(adj) + laplacian_delta(batch, 12),
+        laplacian(apply_update(adj, batch)), atol=1e-6)
+    dw = delta_adjacency(batch, 12)
+    np.testing.assert_allclose(dw, dw.T, atol=0)   # mirrored
+
+
+def test_graph_stream_tracks_and_rejects_mismatched_symmetry():
+    adjs = [community_graph(10, seed=0), community_graph(14, seed=1)]
+    stream = GraphStream(adjs)
+    assert stream.sizes == [10, 14]
+    batch = edge_perturbation(adjs[1], 3, seed=2)
+    lap_before = stream.laplacian(1)
+    dl = stream.apply(1, batch)
+    np.testing.assert_allclose(lap_before + dl, stream.laplacian(1),
+                               atol=1e-6)
+    assert stream.updates_applied.tolist() == [0, 1]
+    with pytest.raises(ValueError, match="directed"):
+        stream.apply(0, UpdateBatch(np.array([0]), np.array([1]),
+                                    np.array([1.0], np.float32),
+                                    symmetric=False))
+
+
+def test_merge_batches():
+    a = make_update_batch([0], [1], [1.0])
+    b = make_update_batch([2], [3], [-1.0])
+    m = merge_batches([a, b])
+    assert m.num_edges == 2
+    assert merge_batches([]) is None
+    with pytest.raises(ValueError, match="merge"):
+        merge_batches([a, make_update_batch([0], [1], [1.0],
+                                            symmetric=False)])
+
+
+# ---------------------------------------------------------------------------
+# drift.py: Hutchinson estimate vs dense residual, monotonicity
+# ---------------------------------------------------------------------------
+
+
+def test_drift_estimate_matches_exact_sym_batched():
+    laps = _sym_laps(3, 16)
+    basis = ApproxEigenbasis.fit(jnp.asarray(laps), 32, n_iter=1)
+    exact = exact_rel_residual(basis, laps)
+    est = estimate_rel_residual(basis, laps, num_probes=256, seed=0)
+    np.testing.assert_allclose(est, exact, rtol=0.3)
+
+
+@pytest.mark.slow
+def test_drift_estimate_matches_exact_general():
+    mats = np.random.default_rng(0).standard_normal((2, 12, 12)).astype(
+        np.float32)
+    basis = ApproxEigenbasis.fit(jnp.asarray(mats), 24, n_iter=1,
+                                 kind="general")
+    exact = exact_rel_residual(basis, mats)
+    est = estimate_rel_residual(basis, mats, num_probes=256, seed=1)
+    np.testing.assert_allclose(est, exact, rtol=0.3)
+
+
+def test_drift_estimate_matches_exact_ragged_masked(ragged_sym_fit):
+    from repro.core import pad_ragged
+    fleet, basis = ragged_sym_fit
+    stack, _ = pad_ragged(fleet)
+    exact = exact_rel_residual(basis, stack)
+    est = estimate_rel_residual(basis, stack, num_probes=256, seed=2)
+    np.testing.assert_allclose(est, exact, rtol=0.3, atol=1e-4)
+
+
+def test_drift_score_zero_on_own_laps_and_monotone():
+    laps = _sym_laps(3, 16)
+    basis = ApproxEigenbasis.fit(jnp.asarray(laps), 48, n_iter=1)
+    base = drift_score(basis, laps, num_probes=128)
+    assert np.all(base < 0.01)        # ~0 up to estimator noise
+    prev = base[1]
+    for num_edges in (4, 12, 30):     # growing perturbation
+        pert = _perturbed(laps, [1], num_edges)
+        d = drift_score(basis, pert, num_probes=128)
+        assert d[1] > prev - 1e-6
+        assert d[1] > base[1]
+        assert d[0] == pytest.approx(base[0], abs=1e-6)  # untouched rows
+        prev = d[1]
+
+
+def test_lemma1_refresh_matches_direct_conjugation():
+    laps = _sym_laps(2, 12)
+    basis = ApproxEigenbasis.fit(jnp.asarray(laps), 24, n_iter=1)
+    pert = _perturbed(laps, [0, 1], 6)
+    refreshed = np.asarray(lemma1_refresh(basis, jnp.asarray(pert)))
+    u = np.asarray(basis.to_dense())
+    want = np.stack([np.diag(u[b].T @ pert[b] @ u[b]) for b in range(2)])
+    np.testing.assert_allclose(refreshed, want, rtol=1e-4, atol=1e-4)
+    # the refresh is the Lemma-1 optimum for the FIXED chain: it never
+    # increases the residual on the new Laplacians
+    from dataclasses import replace
+    refit = replace(basis, spectrum=jnp.asarray(refreshed), objective=None)
+    assert np.all(exact_rel_residual(refit, pert)
+                  <= exact_rel_residual(basis, pert) + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# refit.py: policy thresholds, hysteresis escalation, budgets
+# ---------------------------------------------------------------------------
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="ascending"):
+        RefitPolicy(refresh=0.5, extend=0.1)
+    with pytest.raises(ValueError, match="hysteresis"):
+        RefitPolicy(hysteresis=0.0)
+    with pytest.raises(ValueError, match="extend_fraction"):
+        RefitPolicy(extend_fraction=0.0)
+
+
+def test_controller_threshold_mapping():
+    c = RefitController(RefitPolicy(refresh=0.01, extend=0.1, refit=0.5))
+    assert c.decide([0.001]) is Action.REUSE
+    assert c.decide([0.05]) is Action.REFRESH
+    assert c.decide([0.2]) is Action.EXTEND
+    assert c.decide([0.9]) is Action.REFIT
+    assert c.decide([]) is Action.REUSE
+    # a family without a cheap spectrum refresh (general/T) escalates a
+    # refresh-level trigger to EXTEND, still under the extend budget
+    assert c.decide([0.05], can_refresh=False) is Action.EXTEND
+    c0 = RefitController(RefitPolicy(refresh=0.01, extend=0.1, refit=0.5,
+                                     max_extends=0))
+    assert c0.decide([0.05], can_refresh=False) is Action.REFIT
+
+
+def test_controller_hysteresis_escalates_ineffective_actions():
+    c = RefitController(RefitPolicy(refresh=0.01, extend=0.1, refit=0.5,
+                                    hysteresis=0.5))
+    # refresh leaves drift above the re-arm point -> next same-level
+    # trigger escalates instead of flapping
+    c.record(Action.REFRESH, [0.02])
+    assert c.decide([0.05]) is Action.EXTEND
+    # a successful action (drift below hysteresis x threshold) re-arms
+    c.record(Action.EXTEND, [0.001])
+    assert c.decide([0.05]) is Action.REFRESH
+    # escalation saturates at REFIT
+    c.record(Action.REFIT, [0.9])
+    assert c.decide([0.9]) is Action.REFIT
+
+
+def test_controller_max_extends_forces_refit_and_state_roundtrip():
+    c = RefitController(RefitPolicy(refresh=0.01, extend=0.1, refit=0.5,
+                                    max_extends=2))
+    for _ in range(2):
+        assert c.decide([0.2]) is Action.EXTEND
+        c.record(Action.EXTEND, [0.001])
+    assert c.decide([0.2]) is Action.REFIT
+    c.record(Action.REFIT, [0.001])
+    assert c.extends_since_refit == 0
+    assert c.decide([0.2]) is Action.EXTEND
+    c2 = RefitController(c.policy)
+    c2.load_state_dict(c.state_dict())
+    assert c2.counts == c.counts
+    assert c2.extends_since_refit == c.extends_since_refit
+
+
+# ---------------------------------------------------------------------------
+# Versioned hot-swap serving (launch/serve.py dynamic mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dynamic_engine():
+    """(stream, engine): a B=3 dynamic engine with a refresh-friendly
+    policy, shared across the serving tests (module-scoped: each test
+    perturbs different graphs/rounds)."""
+    from repro.launch.serve import FGFTServeEngine
+    adjs = [community_graph(16, seed=s) for s in range(3)]
+    stream = GraphStream(adjs)
+    laps = np.stack(stream.laplacians())
+    policy = RefitPolicy(refresh=0.004, extend=0.3, refit=0.6,
+                         num_probes=64, hysteresis=1.0)
+    engine = FGFTServeEngine(jnp.asarray(laps), 48, n_iter=1,
+                             tiers={"full": 1.0, "draft": 0.25},
+                             dynamic=True, policy=policy)
+    return stream, engine
+
+
+def test_dynamic_reuse_below_threshold(dynamic_engine):
+    stream, engine = dynamic_engine
+    res = engine.maintain()                      # nothing dirty
+    assert res["action"] == "reuse"
+    # a tiny reweight stays under the refresh threshold
+    batch = weight_jitter(stream.adjs[2], 2, scale=0.01, seed=3)
+    engine.apply_updates(2, stream.apply(2, batch))
+    v0 = engine.versions.copy()
+    res = engine.maintain()
+    assert res["action"] == "reuse"
+    np.testing.assert_array_equal(engine.versions, v0)
+
+
+def test_dynamic_refresh_swaps_without_recompiling(dynamic_engine):
+    stream, engine = dynamic_engine
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (3, 4, 16)).astype(np.float32))
+    h = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
+    engine.warmup(x)
+    assert all(v == 0 for v in engine.stats["steps"].values())
+    y0 = np.asarray(engine.step(x, h))
+    progs = {name: engine._live.fns[name] for name in engine.tiers}
+    sizes0 = {name: p._cache_size() for name, p in progs.items()}
+    versions0 = engine.versions.copy()
+
+    batch = edge_perturbation(stream.adjs[1], 3, seed=11)
+    engine.apply_updates(1, stream.apply(1, batch))
+    res = engine.maintain()
+    assert res["action"] == "refresh"
+    assert engine.versions[1] == versions0[1] + 1
+    assert engine.versions[0] == versions0[0]    # untouched graph
+    y1 = np.asarray(engine.step(x, h))
+    assert np.abs(y1 - y0).max() > 0             # updated basis serves
+    for name, p in progs.items():
+        assert p._cache_size() == sizes0[name]   # zero recompiles
+    # the served spectrum IS the Lemma-1 refresh on the updated laps
+    want = np.asarray(lemma1_refresh(engine.basis,
+                                     jnp.asarray(engine._laps_host)))
+    np.testing.assert_allclose(np.asarray(engine.basis.spectrum), want,
+                               rtol=1e-5, atol=1e-5)
+    dyn = engine.stats["dynamic"]
+    assert dyn["actions"]["refresh"] >= 1
+    assert dyn["versions"] == engine.versions.tolist()
+
+
+@pytest.mark.slow
+def test_dynamic_extend_and_refit_paths():
+    from repro.launch.serve import FGFTServeEngine
+    adjs = [community_graph(16, seed=s) for s in range(2)]
+    stream = GraphStream(adjs)
+    laps = np.stack(stream.laplacians())
+    policy = RefitPolicy(refresh=0.0005, extend=0.002, refit=0.5,
+                         extend_fraction=0.25, max_extends=1,
+                         num_probes=64, hysteresis=1.0)
+    engine = FGFTServeEngine(jnp.asarray(laps), 32, n_iter=1,
+                             tiers={"full": 1.0}, dynamic=True,
+                             policy=policy)
+    g0 = engine.basis.num_transforms
+    batch = edge_perturbation(stream.adjs[0], 8, seed=5)
+    engine.apply_updates(0, stream.apply(0, batch))
+    res = engine.maintain()
+    assert res["action"] == "extend"
+    assert engine.basis.num_transforms == g0 + 8     # 0.25 * 32
+    assert np.all(engine.versions >= 1)              # whole batch regrown
+    # second structural trigger exceeds max_extends -> full refit at g0
+    batch = edge_perturbation(stream.adjs[1], 8, seed=6)
+    engine.apply_updates(1, stream.apply(1, batch))
+    res = engine.maintain()
+    assert res["action"] == "refit"
+    assert engine.basis.num_transforms == g0
+    assert engine.controller.extends_since_refit == 0
+
+
+def test_dynamic_engine_validation(dynamic_engine):
+    from repro.launch.serve import FGFTServeEngine
+    stream, engine = dynamic_engine
+    with pytest.raises(ValueError, match="exceeds"):
+        engine.apply_updates(0, np.zeros((32, 32), np.float32))
+    static = FGFTServeEngine(
+        jnp.asarray(np.stack(GraphStream(
+            [community_graph(8, seed=0)]).laplacians())), 12, n_iter=0)
+    with pytest.raises(ValueError, match="dynamic"):
+        static.apply_updates(0, np.zeros((8, 8), np.float32))
+    with pytest.raises(ValueError, match="dynamic"):
+        static.maintain()
+
+
+# ---------------------------------------------------------------------------
+# Ragged router: per-bucket swaps, request-order versions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_ragged_dynamic_routing_and_versions():
+    from repro.launch.serve import RaggedFGFTServeEngine
+    sizes = [10, 16, 24]
+    adjs = [community_graph(n, seed=i) for i, n in enumerate(sizes)]
+    stream = GraphStream(adjs)
+    policy = RefitPolicy(refresh=0.003, extend=0.4, refit=0.8,
+                         num_probes=64, hysteresis=1.0)
+    router = RaggedFGFTServeEngine(stream.laplacians(), 48, n_iter=1,
+                                   tiers={"full": 1.0}, dynamic=True,
+                                   policy=policy)
+    rng = np.random.default_rng(0)
+    signals = [rng.standard_normal((2, n)).astype(np.float32)
+               for n in sizes]
+    h = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
+    y0 = router.step(signals, h)
+    batch = edge_perturbation(stream.adjs[2], 4, seed=4)
+    router.apply_updates(2, stream.apply(2, batch))
+    res = router.maintain()
+    # only graph 2's bucket acts; the other bucket reuses
+    acted = {w: r["action"] for w, r in res.items()}
+    assert acted[router.widths[2]] != "reuse"
+    assert acted[router.widths[0]] == "reuse"
+    assert router.versions.tolist()[:2] == [0, 0]
+    assert router.versions[2] >= 1
+    assert router.drift().shape == (3,)
+    y1 = router.step(signals, h)
+    assert [a.shape for a in y1] == [b.shape for b in y0]
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: versions + counters round-trip; pre-versioned defaults
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_engine_checkpoint_roundtrip(tmp_path):
+    from repro.launch.serve import FGFTServeEngine
+    adjs = [community_graph(12, seed=s) for s in range(2)]
+    stream = GraphStream(adjs)
+    policy = RefitPolicy(refresh=0.002, extend=0.4, refit=0.8,
+                         num_probes=64, hysteresis=1.0)
+    engine = FGFTServeEngine(jnp.asarray(np.stack(stream.laplacians())),
+                             24, n_iter=1, tiers={"full": 1.0},
+                             dynamic=True, policy=policy)
+    batch = edge_perturbation(stream.adjs[0], 4, seed=9)
+    engine.apply_updates(0, stream.apply(0, batch))
+    engine.maintain()
+    engine.save(tmp_path, step=5)
+    restored = FGFTServeEngine.load(tmp_path)
+    assert restored.dynamic
+    np.testing.assert_array_equal(restored.versions, engine.versions)
+    np.testing.assert_allclose(np.asarray(restored._laps_host),
+                               np.asarray(engine._laps_host), atol=1e-6)
+    assert restored.controller.counts == engine.controller.counts
+    assert restored._live.version == engine._live.version
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (2, 3, 12)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(restored.step(x)),
+                               np.asarray(engine.step(x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pre_versioned_checkpoint_defaults_to_version_zero(tmp_path):
+    """A checkpoint written by plain ApproxEigenbasis.save (no dynamic
+    metadata, no version key — the pre-§11 format) must load with every
+    version at 0 and fresh counters, never a KeyError."""
+    import json
+    from repro.launch.serve import FGFTServeEngine
+    laps = _sym_laps(2, 12)
+    basis = ApproxEigenbasis.fit(jnp.asarray(laps), 24, n_iter=1)
+    basis.save(tmp_path, step=1)
+    # strip the version key to simulate the PRE-versioned manifest
+    manifest_path = tmp_path / "step_000000001" / "manifest.json"
+    manifest = json.loads(manifest_path.read_text())
+    manifest["metadata"]["eigenbasis"].pop("version")
+    manifest["metadata"]["eigenbasis"].pop("stage_pad")
+    manifest_path.write_text(json.dumps(manifest))
+
+    loaded = ApproxEigenbasis.load(tmp_path)
+    assert loaded.info["version"] == 0
+    engine = FGFTServeEngine.load(tmp_path, laps=jnp.asarray(laps),
+                                  dynamic=True, tiers={"full": 1.0})
+    assert engine.versions.tolist() == [0, 0]
+    assert engine.controller.counts == {a.value: 0 for a in Action}
+    assert engine._live.version == 0
+
+
+@pytest.mark.slow
+def test_ragged_router_checkpoint_roundtrip(tmp_path):
+    from repro.launch.serve import RaggedFGFTServeEngine
+    sizes = [10, 16]
+    adjs = [community_graph(n, seed=i) for i, n in enumerate(sizes)]
+    stream = GraphStream(adjs)
+    router = RaggedFGFTServeEngine(
+        stream.laplacians(), 32, n_iter=0, tiers={"full": 1.0},
+        dynamic=True,
+        policy=RefitPolicy(refresh=0.002, num_probes=64, hysteresis=1.0))
+    batch = edge_perturbation(stream.adjs[1], 3, seed=2)
+    router.apply_updates(1, stream.apply(1, batch))
+    router.maintain()
+    router.save(tmp_path, step=2)
+    restored = RaggedFGFTServeEngine.load(tmp_path)
+    assert restored.sizes == router.sizes
+    np.testing.assert_array_equal(restored.versions, router.versions)
+    rng = np.random.default_rng(3)
+    signals = [rng.standard_normal((2, n)).astype(np.float32)
+               for n in sizes]
+    a = router.step(signals)
+    b = restored.step(signals)
+    for ya, yb in zip(a, b):
+        np.testing.assert_allclose(ya, yb, rtol=1e-5, atol=1e-5)

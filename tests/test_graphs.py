@@ -1,10 +1,13 @@
 """graphs/generators.py: structural invariants every generator must hold
-(symmetry, simple-graph shape, determinism) + directed-variant semantics."""
+(symmetry, simple-graph shape, determinism) + directed-variant semantics
++ evolving-stream generators (DESIGN.md §11)."""
 import numpy as np
 import pytest
 
-from repro.graphs import (community_graph, directed_variant, erdos_renyi,
-                          real_graph_standin, sensor_graph, GRAPHS)
+from repro.graphs import (community_graph, directed_variant,
+                          edge_perturbation, erdos_renyi,
+                          evolving_erdos_renyi, real_graph_standin,
+                          sensor_graph, weight_jitter, GRAPHS)
 
 GENS = [("community", lambda seed: community_graph(64, seed=seed)),
         ("erdos_renyi", lambda seed: erdos_renyi(64, 0.3, seed=seed)),
@@ -72,3 +75,73 @@ def test_graphs_registry_covers_generators():
     for gen in GRAPHS.values():
         a = gen(32)
         assert a.shape == (32, 32)
+
+
+# ---------------------------------------------------------------------------
+# Evolving-stream generators (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def test_evolving_stream_preserves_symmetry_and_churn_bound():
+    from repro.dynamic import apply_update
+    n, churn, steps = 32, 0.08, 5
+    budget = int(np.ceil(churn * n * (n - 1) / 2))
+    adj0, batches = evolving_erdos_renyi(n, churn=churn, steps=steps,
+                                         seed=0)
+    np.testing.assert_array_equal(adj0, adj0.T)
+    assert len(batches) == steps
+    adj = adj0.copy()
+    for batch in batches:
+        assert batch.symmetric
+        assert batch.num_edges <= budget           # delta sparsity bound
+        before = adj
+        adj = apply_update(adj, batch)
+        np.testing.assert_array_equal(adj, adj.T)  # symmetry preserved
+        assert np.all(np.diag(adj) == 0)
+        assert np.all(adj >= 0)
+        # the batch touched at most `budget` pairs
+        touched = int((np.triu(np.abs(adj - before), 1) > 0).sum())
+        assert touched <= budget
+    # replaying the seeded stream is deterministic
+    adj0b, batches_b = evolving_erdos_renyi(n, churn=churn, steps=steps,
+                                            seed=0)
+    np.testing.assert_array_equal(adj0, adj0b)
+    for a, b in zip(batches, batches_b):
+        np.testing.assert_array_equal(a.i, b.i)
+        np.testing.assert_array_equal(a.dw, b.dw)
+
+
+def test_evolving_stream_directed_keeps_one_direction_per_edge():
+    from repro.dynamic import apply_update
+    adj0, batches = evolving_erdos_renyi(24, churn=0.1, steps=4, seed=1,
+                                         directed=True)
+    adj = adj0.copy()
+    for batch in batches:
+        assert not batch.symmetric
+        adj = apply_update(adj, batch)
+        assert np.all((adj > 0) & (adj.T > 0) == False)  # noqa: E712
+        assert np.all(adj >= 0)
+
+
+def test_edge_perturbation_mixes_insert_delete_reweight():
+    adj = erdos_renyi(24, 0.3, seed=3)
+    batch = edge_perturbation(adj, 40, seed=4, p_delete=0.5)
+    occupied = adj[batch.i, batch.j] + adj[batch.j, batch.i] > 0
+    inserts = ~occupied
+    deletes = occupied & np.isclose(batch.dw,
+                                    -adj[batch.i, batch.j], atol=1e-6)
+    assert inserts.sum() > 0 and deletes.sum() > 0
+    assert batch.num_edges <= 40
+
+
+def test_weight_jitter_touches_existing_edges_only():
+    from repro.dynamic import apply_update
+    adj = erdos_renyi(24, 0.3, seed=5)
+    batch = weight_jitter(adj, 20, scale=0.3, seed=6)
+    assert batch.num_edges <= 20
+    assert np.all(adj[batch.i, batch.j] > 0)       # existing edges only
+    out = apply_update(adj, batch)
+    np.testing.assert_array_equal(out, out.T)
+    np.testing.assert_array_equal(out > 0, adj > 0)  # topology untouched
+    empty = weight_jitter(np.zeros((8, 8), np.float32), 5, seed=7)
+    assert empty.num_edges == 0
