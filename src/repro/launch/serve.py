@@ -226,8 +226,30 @@ def parse_args(argv=None):
                     help="refit-policy thresholds as "
                          "'refresh,extend,refit' drift scores "
                          "(default: the RefitPolicy defaults)")
+    # async serving front-end (DESIGN.md §12)
+    ap.add_argument("--serve-async", action="store_true",
+                    help="serve through the ASYNC front-end (implies "
+                         "--fgft): bounded request queue with load "
+                         "shedding, cross-tenant micro-batching into "
+                         "fused dispatches, background maintenance, "
+                         "per-tier SLO stats (launch/service.py)")
+    ap.add_argument("--load-requests", type=int, default=64,
+                    help="requests generated by the --serve-async load")
+    ap.add_argument("--load-workers", type=int, default=4,
+                    help="closed-loop tenant threads in --serve-async")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open-loop arrival rate for --serve-async "
+                         "(0 = closed loop driven by --load-workers)")
+    ap.add_argument("--max-queue", type=int, default=128,
+                    help="admission-control queue bound (requests past "
+                         "it are shed with a typed rejection)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="max requests coalesced into one fused dispatch")
+    ap.add_argument("--maintain-interval", type=float, default=0.05,
+                    help="background maintenance period in seconds "
+                         "(--serve-async --dynamic)")
     args = ap.parse_args(argv)
-    if args.filter or args.ragged or args.dynamic:
+    if args.filter or args.ragged or args.dynamic or args.serve_async:
         args.fgft = True
     args.policy = None
     if args.drift_thresholds:
@@ -494,13 +516,12 @@ class FGFTServeEngine:
 
     # -- serving hot path --------------------------------------------------
 
-    def step(self, signals: jnp.ndarray, h=None,
-             tier: Optional[str] = None) -> jnp.ndarray:
-        """Filter one (B, R, n) signal block on every graph at once, at
-        the requested quality tier (default: the highest-quality tier in
-        the map, whatever its name).  ``h`` maps the tier's (refit) graph
-        frequencies to gains."""
-        live = self._live
+    def _step_on(self, live: _LiveVersion, signals: jnp.ndarray, h,
+                 tier: Optional[str]) -> jnp.ndarray:
+        """Tier dispatch against ONE live-version snapshot: tables, tier
+        spectra and program binding all come from ``live``, so a
+        concurrent ``maintain()`` swap can never mix versions inside a
+        single response (the async front-end relies on this)."""
         tier = tier if tier is not None else self.default_tier
         t = live.tiers[tier]
         d = t["spectrum"] if h is None else h(t["spectrum"])
@@ -511,13 +532,36 @@ class FGFTServeEngine:
         self.stats["steps"][tier] += 1
         return live.fns[tier](live.fwd, live.bwd, d, signals)
 
+    def step(self, signals: jnp.ndarray, h=None,
+             tier: Optional[str] = None) -> jnp.ndarray:
+        """Filter one (B, R, n) signal block on every graph at once, at
+        the requested quality tier (default: the highest-quality tier in
+        the map, whatever its name).  ``h`` maps the tier's (refit) graph
+        frequencies to gains."""
+        return self._step_on(self._live, signals, h, tier)
+
+    def step_versioned(self, signals: jnp.ndarray, h=None,
+                       tier: Optional[str] = None) -> tuple:
+        """``step`` that also returns the serving version that produced
+        the answer, both read from a SINGLE atomic ``_live`` snapshot
+        (DESIGN.md §12: per-response version accounting for the async
+        service)."""
+        live = self._live
+        return self._step_on(live, signals, h, tier), live.version
+
     def step_bank(self, signals: jnp.ndarray) -> jnp.ndarray:
         """All F bank responses on every graph: (B, R, n) ->
         (B, F, R, n), one fused dispatch (full tier; DESIGN.md §8)."""
+        return self.step_bank_versioned(signals)[0]
+
+    def step_bank_versioned(self, signals: jnp.ndarray) -> tuple:
+        """``step_bank`` plus the serving version, from one atomic
+        ``_live`` snapshot (DESIGN.md §12)."""
         live = self._live
         if live.bank is None:
             raise ValueError("engine was built without --filter responses")
-        return live.bank_fn(live.fwd, live.bwd, live.bank_gains, signals)
+        return (live.bank_fn(live.fwd, live.bwd, live.bank_gains, signals),
+                live.version)
 
     # -- streaming updates + drift-triggered refits (DESIGN.md §11) --------
 
@@ -673,11 +717,13 @@ class FGFTServeEngine:
 
     # -- persistence (checkpoint/store.py; DESIGN.md §6/§11) ---------------
 
-    def save(self, directory, step: int = 0):
+    def save(self, directory, step: int = 0, extra_metadata=None):
         """Persist the live basis + serving state through the atomic
         checkpoint store: the tracked Laplacians ride as an extra state
         leaf, per-graph versions and drift/refit counters as metadata,
-        and the engine swap counter as the basis version."""
+        and the engine swap counter as the basis version.
+        ``extra_metadata`` merges additional top-level metadata keys (the
+        async service persists its SLO counters this way)."""
         from dataclasses import replace as _replace
         live = self._live
         basis = _replace(live.basis,
@@ -688,6 +734,12 @@ class FGFTServeEngine:
                       "filters": self._filters,
                       "n_iter": self._n_iter,
                       "num_transforms": int(self._g0)}}
+        if extra_metadata:
+            overlap = {"serve", "dynamic"} & set(extra_metadata)
+            if overlap:
+                raise ValueError(f"extra_metadata may not override the "
+                                 f"engine's own keys: {sorted(overlap)}")
+            extra_meta.update(extra_metadata)
         extra_state = {"laps": jnp.asarray(self._laps_host)}
         if self.dynamic:
             extra_meta["dynamic"] = {
@@ -1045,6 +1097,9 @@ def serve_fgft(args) -> dict:
     from repro.core.fgft import laplacian
     from repro.graphs import community_graph, directed_variant
 
+    if args.serve_async:
+        from repro.launch.service import serve_fgft_async
+        return serve_fgft_async(args)
     if args.dynamic:
         return serve_fgft_dynamic(args)
     if args.ragged:

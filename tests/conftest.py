@@ -1,5 +1,6 @@
 import os
 import sys
+import threading
 
 # Tests must see ONE CPU device (the dry-run's 512-device forcing is local
 # to repro.launch.dryrun, never global).
@@ -8,6 +9,42 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import pytest  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Thread-leak guard: a test that leaves a non-daemon thread running (an
+# unclosed AsyncFGFTService dispatcher/maintainer, a forgotten worker)
+# would hang the interpreter at exit and poison every later test's
+# concurrency assertions — fail THAT test, by name, instead.
+# ---------------------------------------------------------------------------
+
+
+def _non_daemon_threads():
+    return {t for t in threading.enumerate()
+            if t.is_alive() and not t.daemon}
+
+
+@pytest.fixture(autouse=True)
+def _thread_leak_guard():
+    before = _non_daemon_threads()
+    yield
+    leaked = [t for t in _non_daemon_threads() if t not in before]
+    # bounded grace for threads mid-exit (a close() racing the teardown),
+    # then best-effort reap so the interpreter can still shut down — but
+    # a thread that needed reaping still fails the test that leaked it
+    for t in leaked:
+        t.join(2.0)
+    leaked = [t for t in leaked if t.is_alive()]
+    if not leaked:
+        return
+    names = sorted(t.name for t in leaked)
+    from repro.launch.service import shutdown_all_services
+    shutdown_all_services()
+    for t in leaked:
+        t.join(2.0)
+    pytest.fail(f"test leaked non-daemon thread(s): {names} — join every "
+                f"worker and close every AsyncFGFTService before the test "
+                f"returns", pytrace=False)
 
 
 # ---------------------------------------------------------------------------

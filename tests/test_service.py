@@ -1,0 +1,505 @@
+"""Async serving front-end (launch/service.py, DESIGN.md §12): exact
+SLO-stats math under a fake injectable clock (no sleeps, no wall-clock
+sensitivity), admission control, coalescing-equivalence properties
+(fused micro-batch == per-request loop, bitwise for the G family), and
+SLO persistence next to the engine checkpoint."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.launch.serve import FGFTServeEngine, RaggedFGFTServeEngine
+from repro.launch.service import (AsyncFGFTService, LatencyRecorder,
+                                  ServiceClosed, ShedError, load_slo_stats,
+                                  quantize_rows)
+
+lowpass = lambda lam: 1.0 / (1.0 + lam)  # noqa: E731
+
+
+class FakeClock:
+    """Injectable monotonic clock: advances only when told to, so every
+    latency figure the service reports is exact arithmetic."""
+
+    def __init__(self, t=0.0, step=0.0):
+        self.t = float(t)
+        self.step = float(step)          # optional auto-advance per read
+
+    def __call__(self):
+        now = self.t
+        self.t += self.step
+        return now
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def drain_all(service):
+    """Pump the queue inline until empty; returns dispatch batch sizes."""
+    sizes = []
+    while True:
+        n = service.drain_once()
+        if n == 0:
+            return sizes
+        sizes.append(n)
+
+
+# ---------------------------------------------------------------------------
+# quantize_rows
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_rows_pow2_ladder():
+    assert [quantize_rows(r) for r in (1, 7, 8, 9, 16, 17)] == \
+        [8, 8, 8, 16, 16, 32]
+    # non-default quantum: power-of-two MULTIPLES of the quantum
+    assert [quantize_rows(r, 3) for r in (1, 3, 4, 6, 7)] == \
+        [3, 3, 6, 6, 12]
+
+
+def test_quantize_rows_validation():
+    with pytest.raises(ValueError):
+        quantize_rows(0)
+    with pytest.raises(ValueError):
+        quantize_rows(4, quantum=0)
+
+
+# ---------------------------------------------------------------------------
+# LatencyRecorder: pure arithmetic, asserted exactly
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_nearest_rank_percentiles():
+    rec = LatencyRecorder()
+    for ms in range(1, 11):                       # 1..10 ms
+        rec.record("t", ms * 1e-3)
+    assert rec.count("t") == 10
+    assert rec.percentile("t", 0.0) == pytest.approx(1e-3)
+    assert rec.percentile("t", 50.0) == pytest.approx(5e-3)
+    assert rec.percentile("t", 99.0) == pytest.approx(10e-3)
+    assert rec.percentile("t", 100.0) == pytest.approx(10e-3)
+    s = rec.summary()["t"]
+    assert s["count"] == 10
+    assert s["mean_s"] == pytest.approx(5.5e-3)
+    assert s["p50_s"] == pytest.approx(5e-3)
+    assert s["max_s"] == pytest.approx(10e-3)
+
+
+def test_recorder_window_eviction_keeps_exact_globals():
+    rec = LatencyRecorder(max_samples=4)
+    for ms in range(10, 0, -1):                   # 10ms first, then smaller
+        rec.record("t", ms * 1e-3)
+    # window retains the LAST 4 samples (4,3,2,1 ms) ...
+    assert rec.percentile("t", 100.0) == pytest.approx(4e-3)
+    # ... but count/mean/max stay exact over ALL samples ever recorded
+    s = rec.summary()["t"]
+    assert s["count"] == 10
+    assert s["mean_s"] == pytest.approx(5.5e-3)
+    assert s["max_s"] == pytest.approx(10e-3)
+
+
+def test_recorder_histogram_buckets():
+    rec = LatencyRecorder()
+    for s in (0.0, 1e-4, 1.5e-4, 1.0):
+        rec.record("t", s)
+    hist = rec.histogram("t")
+    assert sum(b["count"] for b in hist) == 4
+    assert hist[0] == {"le_s": 0.0, "count": 1}           # the exact zero
+    assert hist[-1]["le_s"] == float("inf")
+    assert hist[-1]["count"] == 1                         # the 1.0 outlier
+    # geometric edges are data-independent: origin * base^i
+    assert hist[1]["le_s"] == pytest.approx(1e-4)
+    assert hist[2]["le_s"] == pytest.approx(2e-4)
+
+
+def test_recorder_validation():
+    rec = LatencyRecorder()
+    with pytest.raises(ValueError):
+        rec.record("t", -1e-3)
+    with pytest.raises(ValueError):
+        rec.record("t", float("nan"))
+    with pytest.raises(KeyError):
+        rec.percentile("missing", 50.0)
+    rec.record("t", 1e-3)
+    with pytest.raises(ValueError):
+        rec.percentile("t", 101.0)
+    with pytest.raises(ValueError):
+        LatencyRecorder(max_samples=0)
+    # keys with no samples simply don't appear
+    assert rec.keys() == ["t"]
+
+
+# ---------------------------------------------------------------------------
+# Shared engines (prefit bases: fitting is the expensive part)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sym_engine(sym_batch48):
+    mats, basis = sym_batch48
+    return FGFTServeEngine(mats, basis=basis,
+                           tiers={"full": 1.0, "draft": 0.5},
+                           filters="heat,lowpass")
+
+
+@pytest.fixture(scope="module")
+def gen_engine():
+    mats = jnp.asarray(np.random.default_rng(7).standard_normal(
+        (2, 12, 12)).astype(np.float32))
+    return FGFTServeEngine(mats, 24, n_iter=1, kind="general",
+                           tiers={"full": 1.0, "draft": 0.5})
+
+
+@pytest.fixture(scope="module")
+def ragged_engine():
+    def s(n, seed):
+        x = np.random.default_rng(seed).standard_normal((n, n)).astype(
+            np.float32)
+        return x + x.T
+
+    # sizes 6/12/7 -> buckets {8: [0, 2], 16: [1]}: two dispatch groups
+    return RaggedFGFTServeEngine([s(6, 0), s(12, 1), s(7, 2)], 16,
+                                 n_iter=1, tiers={"full": 1.0})
+
+
+def signals_for(engine, gid, rows, seed):
+    route_n = (engine.sizes[gid] if isinstance(engine, RaggedFGFTServeEngine)
+               else engine.basis.n)
+    return np.random.default_rng(seed).standard_normal(
+        (rows, route_n)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic service behaviour: fake clock + inline drain (no threads)
+# ---------------------------------------------------------------------------
+
+
+def test_queue_latency_is_exact(sym_engine):
+    clock = FakeClock()
+    svc = AsyncFGFTService(sym_engine, clock=clock, auto_start=False)
+    fut = svc.submit(0, signals_for(sym_engine, 0, 2, 0))
+    clock.advance(0.25)                 # request waits a quarter second
+    assert svc.drain_once() == 1
+    res = fut.result(timeout=0)
+    assert res.queue_s == pytest.approx(0.25)
+    assert res.service_s == 0.0         # clock frozen across the dispatch
+    assert res.total_s == pytest.approx(0.25)
+    assert res.graph_id == 0 and res.tier == "full" and res.batch_size == 1
+    assert res.version == sym_engine._live.version
+    lat = svc.stats()["latency"]
+    assert lat["full/queue"]["p50_s"] == pytest.approx(0.25)
+    assert lat["full/total"]["count"] == 1
+
+
+def test_ticking_clock_splits_queue_and_service(sym_engine):
+    # every clock read advances 1s: t_submit=0, t0=1, t1=2
+    svc = AsyncFGFTService(sym_engine, clock=FakeClock(step=1.0),
+                           auto_start=False)
+    fut = svc.submit(0, signals_for(sym_engine, 0, 1, 1))
+    svc.drain_once()
+    res = fut.result(timeout=0)
+    assert res.queue_s == pytest.approx(1.0)
+    assert res.service_s == pytest.approx(1.0)
+    assert res.total_s == pytest.approx(2.0)
+
+
+def test_percentiles_from_scripted_waits(sym_engine):
+    clock = FakeClock()
+    svc = AsyncFGFTService(sym_engine, clock=clock, max_batch=1,
+                           auto_start=False)
+    waits = [0.001 * k for k in range(1, 11)]     # 1..10 ms queue waits
+    for w in waits:
+        fut = svc.submit(1, signals_for(sym_engine, 1, 1, 2))
+        clock.advance(w)
+        svc.drain_once()
+        assert fut.result(timeout=0).queue_s == pytest.approx(w)
+    lat = svc.stats()["latency"]["full/queue"]
+    assert lat["count"] == 10
+    assert lat["p50_s"] == pytest.approx(0.005)   # nearest rank, exact
+    assert lat["p99_s"] == pytest.approx(0.010)
+    assert lat["mean_s"] == pytest.approx(0.0055)
+
+
+def test_admission_control_sheds_typed(sym_engine):
+    svc = AsyncFGFTService(sym_engine, max_queue=2, auto_start=False)
+    x = signals_for(sym_engine, 0, 1, 3)
+    svc.submit(0, x)
+    svc.submit(1, x)
+    with pytest.raises(ShedError) as err:
+        svc.submit(2, x)
+    assert err.value.queue_depth == 2
+    assert err.value.max_queue == 2
+    assert err.value.graph_id == 2
+    st = svc.stats()
+    assert st["shed"] == 1 and st["submitted"] == 2
+    assert st["queue"]["depth"] == 2 and st["queue"]["peak"] == 2
+    drain_all(svc)                      # the two accepted ones still serve
+    assert svc.stats()["served"] == 2
+
+
+def test_coalescing_groups_and_occupancy(sym_engine):
+    svc = AsyncFGFTService(sym_engine, max_batch=8, auto_start=False)
+    x = signals_for(sym_engine, 0, 2, 4)
+    futs = [svc.submit(0, x, tier="full"), svc.submit(1, x, tier="full"),
+            svc.submit(2, x, tier="draft"),       # different group
+            svc.submit(0, x, tier="full")]        # same graph again
+    # head group (full) coalesces 3 across the draft request; FIFO kept
+    assert svc.drain_once() == 3
+    assert [f.done() for f in futs] == [True, True, False, True]
+    assert futs[0].result(timeout=0).batch_size == 3
+    assert svc.drain_once() == 1
+    st = svc.stats()
+    assert st["dispatches"] == 2
+    assert st["batch"]["occupancy_mean"] == pytest.approx(2.0)
+    assert st["batch"]["occupancy_max"] == 3
+    assert st["served"] == 4
+
+
+def test_max_batch_caps_coalescing(sym_engine):
+    svc = AsyncFGFTService(sym_engine, max_batch=2, auto_start=False)
+    x = signals_for(sym_engine, 0, 1, 5)
+    for _ in range(5):
+        svc.submit(0, x)
+    assert drain_all(svc) == [2, 2, 1]
+
+
+def test_submit_validation(sym_engine):
+    svc = AsyncFGFTService(sym_engine, auto_start=False)
+    x = signals_for(sym_engine, 0, 1, 6)
+    with pytest.raises(ValueError, match="not in fleet"):
+        svc.submit(3, x)
+    with pytest.raises(ValueError, match="not in fleet"):
+        svc.submit(-1, x)
+    with pytest.raises(ValueError, match="must be"):
+        svc.submit(0, x[:, :5])
+    with pytest.raises(ValueError, match="unknown tier"):
+        svc.submit(0, x, tier="turbo")
+    with pytest.raises(ValueError, match="tiered or bank"):
+        svc.submit(0, x, tier="full", bank=True)
+    # 1-D signals promote to one row
+    fut = svc.submit(0, x[0])
+    svc.drain_once()
+    assert fut.result(timeout=0).y.shape == (1, sym_engine.basis.n)
+
+
+def test_bank_requires_filters(gen_engine):
+    svc = AsyncFGFTService(gen_engine, auto_start=False)
+    with pytest.raises(ValueError, match="bank requests unavailable"):
+        svc.submit(0, signals_for(gen_engine, 0, 1, 7), bank=True)
+
+
+def test_closed_service_rejects_submit(sym_engine):
+    svc = AsyncFGFTService(sym_engine, auto_start=False)
+    svc.close()
+    with pytest.raises(ServiceClosed):
+        svc.submit(0, signals_for(sym_engine, 0, 1, 8))
+    with pytest.raises(ServiceClosed):
+        svc.start()
+
+
+def test_close_drains_pending(sym_engine):
+    # a STARTED service must answer every accepted future before its
+    # dispatcher exits: submit a burst, close immediately, all resolve
+    svc = AsyncFGFTService(sym_engine, auto_start=True)
+    x = signals_for(sym_engine, 0, 2, 9)
+    futs = [svc.submit(i % 3, x) for i in range(12)]
+    svc.close()
+    assert all(f.done() for f in futs)
+    assert svc.stats()["served"] == 12
+
+
+def test_reset_stats_zeroes_counters(sym_engine):
+    svc = AsyncFGFTService(sym_engine, auto_start=False)
+    svc.submit(0, signals_for(sym_engine, 0, 1, 10))
+    svc.drain_once()
+    svc.reset_stats()
+    st = svc.stats()
+    assert st["submitted"] == st["served"] == st["dispatches"] == 0
+    assert st["latency"] == {}
+
+
+def test_dispatch_error_fails_batch_not_service(sym_engine, monkeypatch):
+    svc = AsyncFGFTService(sym_engine, auto_start=False)
+    x = signals_for(sym_engine, 0, 1, 11)
+    boom = svc.submit(0, x)
+    monkeypatch.setattr(
+        svc, "_fused_dispatch",
+        lambda batch: (_ for _ in ()).throw(RuntimeError("device lost")))
+    svc.drain_once()
+    with pytest.raises(RuntimeError, match="device lost"):
+        boom.result(timeout=0)
+    monkeypatch.undo()
+    ok = svc.submit(0, x)               # the service itself keeps serving
+    svc.drain_once()
+    assert ok.result(timeout=0).y.shape == (1, sym_engine.basis.n)
+    st = svc.stats()
+    assert st["errors"] == 1 and st["served"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Coalescing equivalence: fused micro-batch == per-request loop
+# ---------------------------------------------------------------------------
+
+
+def reference_loop(engine, requests, h=None):
+    """The per-request baseline: the SAME service machinery capped at one
+    request per dispatch (so padding/quantization/cropping are identical
+    and any divergence is the coalescing itself)."""
+    svc = AsyncFGFTService(engine, h=h, max_batch=1, auto_start=False)
+    outs = []
+    for gid, x, tier, bank in requests:
+        fut = svc.submit(gid, x, tier=tier, bank=bank)
+        svc.drain_once()
+        outs.append(fut.result(timeout=0))
+    return outs
+
+
+def coalesced(engine, requests, h=None, max_batch=8):
+    svc = AsyncFGFTService(engine, h=h, max_batch=max_batch,
+                           auto_start=False)
+    futs = [svc.submit(gid, x, tier=tier, bank=bank)
+            for gid, x, tier, bank in requests]
+    drain_all(svc)
+    return [f.result(timeout=0) for f in futs]
+
+
+def sym_request_mix(engine, bank=False):
+    """Same-graph stacking, cross-graph rows, varying row counts, both
+    tiers — every coalescing shape in one list."""
+    reqs = []
+    for i, (gid, rows) in enumerate(
+            [(0, 1), (1, 3), (0, 2), (2, 1), (1, 1), (2, 4)]):
+        tier = None if bank else ("full" if i % 2 == 0 else "draft")
+        reqs.append((gid, signals_for(engine, gid, rows, 20 + i),
+                     tier, bank))
+    return reqs
+
+
+def test_equivalence_sym_bitwise(sym_engine):
+    reqs = sym_request_mix(sym_engine)
+    ref = reference_loop(sym_engine, reqs, h=lowpass)
+    got = coalesced(sym_engine, reqs, h=lowpass)
+    for a, b in zip(got, ref):
+        assert a.y.shape == b.y.shape
+        assert np.array_equal(a.y, b.y)           # bitwise: G family
+    # sanity: coalescing actually happened (not 1-request dispatches)
+    assert max(r.batch_size for r in got) > 1
+
+
+def test_equivalence_bank_bitwise(sym_engine):
+    reqs = sym_request_mix(sym_engine, bank=True)
+    ref = reference_loop(sym_engine, reqs)
+    got = coalesced(sym_engine, reqs)
+    for a, b in zip(got, ref):
+        assert a.tier == "bank"
+        assert np.array_equal(a.y, b.y)
+    f = len(sym_engine.bank)
+    assert got[1].y.shape == (f, 3, sym_engine.basis.n)
+
+
+def test_equivalence_single_and_full_batch(sym_engine):
+    # edge cases: a lone request, and exactly max_batch same-group ones
+    lone = [(1, signals_for(sym_engine, 1, 2, 30), "full", False)]
+    assert np.array_equal(coalesced(sym_engine, lone)[0].y,
+                          reference_loop(sym_engine, lone)[0].y)
+    full = [(i % 3, signals_for(sym_engine, i % 3, 2, 31 + i),
+             "full", False) for i in range(8)]
+    got = coalesced(sym_engine, full, max_batch=8)
+    ref = reference_loop(sym_engine, full)
+    assert got[0].batch_size == 8                 # one fused dispatch
+    for a, b in zip(got, ref):
+        assert np.array_equal(a.y, b.y)
+
+
+def test_equivalence_general_tolerance(gen_engine):
+    reqs = [(i % 2, signals_for(gen_engine, i % 2, 1 + i % 3, 40 + i),
+             "full" if i % 2 == 0 else "draft", False) for i in range(6)]
+    ref = reference_loop(gen_engine, reqs, h=lowpass)
+    got = coalesced(gen_engine, reqs, h=lowpass)
+    for a, b in zip(got, ref):
+        np.testing.assert_allclose(a.y, b.y, atol=1e-5, rtol=1e-5)
+
+
+def test_equivalence_ragged_buckets(ragged_engine):
+    reqs = [(gid, signals_for(ragged_engine, gid, rows, 50 + gid), "full",
+             False)
+            for gid, rows in [(0, 2), (1, 1), (2, 3), (0, 1), (1, 2)]]
+    ref = reference_loop(ragged_engine, reqs, h=lowpass)
+    got = coalesced(ragged_engine, reqs, h=lowpass)
+    for (gid, x, _, _), a, b in zip(reqs, got, ref):
+        assert a.y.shape == (x.shape[0], ragged_engine.sizes[gid])
+        assert np.array_equal(a.y, b.y)
+    # different buckets never share a dispatch: the three bucket-8
+    # requests (graphs 0, 2) fuse together, the two bucket-16 ones
+    # (graph 1) fuse together — never across
+    assert [r.batch_size for r, (gid, *_) in zip(got, reqs)
+            if gid in (0, 2)] == [3, 3, 3]
+    assert [r.batch_size for r, (gid, *_) in zip(got, reqs)
+            if gid == 1] == [2, 2]
+
+
+# ---------------------------------------------------------------------------
+# Deterministic maintenance accounting (inline tick: no maintainer thread)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def dyn_engine():
+    from repro.core.fgft import laplacian
+    from repro.dynamic import RefitPolicy
+    from repro.graphs import erdos_renyi
+    laps = np.stack([laplacian(erdos_renyi(12, 0.4, seed=s))
+                     for s in range(2)])
+    # refresh threshold ~0 so any real update forces a swap (sym family)
+    return FGFTServeEngine(jnp.asarray(laps), 24, n_iter=1, dynamic=True,
+                           policy=RefitPolicy(refresh=1e-9, extend=10.0,
+                                              refit=10.0, num_probes=16,
+                                              max_extends=0))
+
+
+def test_maintain_now_inline_counts_swaps(dyn_engine):
+    from repro.graphs import weight_jitter
+    svc = AsyncFGFTService(dyn_engine, auto_start=False)
+    v0 = dyn_engine._live.version
+    res = svc.maintain_now()            # clean fleet: REUSE, no swap
+    assert res["action"] == "reuse"
+    adj = (np.abs(np.asarray(dyn_engine._laps_host[0])) *
+           (1 - np.eye(12))).astype(np.float32)
+    dyn_engine.apply_updates(0, weight_jitter(adj, 6, scale=0.2, seed=1))
+    res = svc.maintain_now()
+    assert res["action"] != "reuse"
+    assert dyn_engine._live.version == v0 + 1
+    st = svc.stats()["maintain"]
+    assert st == {"enabled": True, "ticks": 2, "errors": 0, "swaps": 1}
+
+
+def test_maintain_rejects_static_engine(sym_engine):
+    svc = AsyncFGFTService(sym_engine, auto_start=False)
+    with pytest.raises(ValueError, match="dynamic"):
+        svc.maintain_now()
+    assert svc.stats()["maintain"]["enabled"] is False
+
+
+# ---------------------------------------------------------------------------
+# SLO persistence next to the engine checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_save_slo_uniform_metadata(sym_engine, tmp_path):
+    svc = AsyncFGFTService(sym_engine, auto_start=False)
+    svc.submit(0, signals_for(sym_engine, 0, 1, 60))
+    svc.drain_once()
+    svc.save(tmp_path / "ckpt")
+    slo = load_slo_stats(tmp_path / "ckpt")
+    assert slo["served"] == 1 and slo["dispatches"] == 1
+    assert "full/total" in slo["latency"]
+
+
+def test_save_slo_ragged_sidecar(ragged_engine, tmp_path):
+    svc = AsyncFGFTService(ragged_engine, auto_start=False)
+    svc.submit(1, signals_for(ragged_engine, 1, 2, 61))
+    svc.drain_once()
+    out = svc.save(tmp_path / "router")
+    assert (out / "slo.json").exists()
+    slo = load_slo_stats(out)
+    assert slo["served"] == 1
+    assert slo["queue"]["max"] == svc.max_queue

@@ -1,0 +1,196 @@
+"""Versioned hot-swap under real concurrency (DESIGN.md §11/§12): N
+threads hammer the serving path while ``maintain()`` refits and swaps
+underneath.  Every response must be internally consistent — produced by
+exactly ONE serving version, bitwise equal to that version's
+single-threaded answer (no torn tier tables), no exceptions anywhere —
+and shutdown must return the thread count to baseline.
+
+Synchronization discipline: the assertions are all on recorded VALUES
+(versions, outputs, counters), never on timing — threads are joined
+before anything is checked, so nothing here can flake on a slow box."""
+import threading
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.launch.serve import FGFTServeEngine
+from repro.launch.service import (AsyncFGFTService, closed_loop_load,
+                                  shutdown_all_services)
+
+
+def _alive_non_daemon():
+    return {t for t in threading.enumerate()
+            if t.is_alive() and not t.daemon}
+
+
+@pytest.fixture()
+def dyn_fleet():
+    """(engine, stream): a 2-graph dynamic symmetric fleet whose refresh
+    threshold is ~0, so every churn round forces a version swap."""
+    from repro.dynamic import GraphStream, RefitPolicy
+    from repro.graphs import erdos_renyi
+    adjs = [erdos_renyi(12, 0.4, seed=s) for s in range(2)]
+    stream = GraphStream(adjs)
+    laps = np.stack(stream.laplacians())
+    engine = FGFTServeEngine(jnp.asarray(laps), 24, n_iter=1, dynamic=True,
+                             policy=RefitPolicy(refresh=1e-9, extend=10.0,
+                                                refit=10.0, num_probes=16,
+                                                max_extends=0))
+    return engine, stream
+
+
+def _churn(engine, stream, rnd):
+    from repro.graphs import weight_jitter
+    for gid in range(len(stream.adjs)):
+        batch = weight_jitter(stream.adjs[gid], 6, scale=0.2,
+                              seed=100 * rnd + gid)
+        engine.apply_updates(gid, stream.apply(gid, batch))
+
+
+def test_engine_step_versioned_no_torn_reads(dyn_fleet):
+    """Engine-level: concurrent step_versioned() during swaps must return
+    (y, v) pairs where y is BITWISE the single-threaded answer of version
+    v — a torn read mixing two versions' tables matches neither."""
+    engine, stream = dyn_fleet
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2, 4, 12)).astype(np.float32))
+    engine.warmup(x)                    # compile before the race starts
+    expected = {}                       # version -> canonical output
+
+    def snapshot():
+        y, v = engine.step_versioned(x)
+        expected[v] = np.asarray(y)
+
+    snapshot()
+    seen, errors = [], []
+    stop = threading.Event()
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                y, v = engine.step_versioned(x)
+                seen.append((v, np.asarray(y)))
+        except BaseException as exc:  # noqa: BLE001 — joined + re-raised below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    # only this thread mutates the engine, so right after each maintain()
+    # the live version is stable and snapshot() records its exact answer
+    for rnd in range(5):
+        _churn(engine, stream, rnd)
+        engine.maintain()
+        snapshot()
+    stop.set()
+    for t in threads:
+        t.join(30)
+    assert not errors
+    assert len(expected) >= 5           # the swaps actually happened
+    assert len(seen) > 0
+    for v, y in seen:
+        assert v in expected, f"response carried unknown version {v}"
+        assert np.array_equal(y, expected[v]), \
+            f"torn read: output does not match version {v}"
+
+
+def test_service_stress_versions_monotonic(dyn_fleet):
+    """Service-level: tenant threads submit through the queue while the
+    maintainer thread swaps versions.  Each tenant waits for its previous
+    answer before the next submit, so the versions it observes must be
+    non-decreasing; every payload must be finite."""
+    engine, stream = dyn_fleet
+    engine.warmup(jnp.asarray(np.zeros((2, 8, 12), np.float32)))
+    baseline = _alive_non_daemon()
+    rng = np.random.default_rng(1)
+    svc = AsyncFGFTService(engine, max_queue=256, max_batch=4,
+                           maintain_interval=None, name="stress")
+    assert _alive_non_daemon() > baseline        # dispatcher + maintainer
+    per_thread = {}
+    errors = []
+
+    def tenant(k):
+        versions = per_thread[k] = []
+        x = rng.standard_normal((2, 12)).astype(np.float32)
+        try:
+            for i in range(12):
+                res = svc.submit((k + i) % 2, x).result(timeout=60)
+                assert np.isfinite(res.y).all()
+                versions.append(res.version)
+        except BaseException as exc:  # noqa: BLE001 — joined + re-raised below
+            errors.append(exc)
+
+    tenants = [threading.Thread(target=tenant, args=(k,))
+               for k in range(6)]
+    for t in tenants:
+        t.start()
+    for rnd in range(4):                # churn + swap while they serve
+        _churn(engine, stream, rnd)
+        svc.maintain_now(timeout=60)
+    for t in tenants:
+        t.join(120)
+    assert not errors
+    stats = svc.stats()
+    svc.close()
+    assert stats["maintain"]["swaps"] >= 4
+    assert stats["served"] == 6 * 12 and stats["errors"] == 0
+    for k, versions in per_thread.items():
+        assert len(versions) == 12
+        assert versions == sorted(versions), \
+            f"tenant {k} observed a version rollback: {versions}"
+    # every maintainer/dispatcher thread is gone: count back to baseline
+    assert _alive_non_daemon() == baseline
+
+
+def test_maintain_failure_does_not_kill_serving(dyn_fleet, monkeypatch):
+    """A refit that throws must surface through maintain_now() (with the
+    original cause), count in stats, and leave both the maintainer thread
+    and the serving path alive."""
+    engine, stream = dyn_fleet
+    real_maintain = engine.maintain
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise ValueError("probe matrix went singular")
+        return real_maintain()
+
+    monkeypatch.setattr(engine, "maintain", flaky)
+    with AsyncFGFTService(engine, maintain_interval=None,
+                          name="flaky") as svc:
+        with pytest.raises(RuntimeError, match="maintenance tick failed") \
+                as err:
+            svc.maintain_now(timeout=60)
+        assert isinstance(err.value.__cause__, ValueError)
+        res = svc.maintain_now(timeout=60)       # next tick recovers
+        assert res["action"] == "reuse"
+        x = np.zeros((1, 12), np.float32)
+        assert svc.submit(0, x).result(timeout=60).y.shape == (1, 12)
+        st = svc.stats()["maintain"]
+        assert st["errors"] == 1 and st["ticks"] == 1
+
+
+def test_close_is_idempotent(dyn_fleet):
+    engine, _ = dyn_fleet
+    baseline = _alive_non_daemon()
+    svc = AsyncFGFTService(engine, name="lifecycle")
+    svc.close()
+    svc.close()                          # second close: no-op, no raise
+    assert _alive_non_daemon() == baseline
+
+
+def test_shutdown_all_services_reaps_leaks(dyn_fleet):
+    """The conftest thread-leak guard's escape hatch: a service a test
+    forgot to close can be force-stopped fleet-wide."""
+    engine, _ = dyn_fleet
+    baseline = _alive_non_daemon()
+    svc = AsyncFGFTService(engine, name="leaked")
+    assert _alive_non_daemon() > baseline
+    assert shutdown_all_services() == 1
+    assert _alive_non_daemon() == baseline
+    assert shutdown_all_services() == 0          # nothing left to reap
+    with pytest.raises(Exception):               # noqa: B017 — closed is closed
+        svc.submit(0, np.zeros((1, 12), np.float32))
