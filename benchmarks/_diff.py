@@ -16,13 +16,24 @@ annotations when
     the trajectory signal the artifacts exist to catch.
 
 Columns are matched BY NAME via the ``columns`` header the runner
-records alongside the rows (benchmarks/common.py), and only names that
-are unambiguously higher-is-better (``*speedup*``, ``*per_s*``) are
-diffed — timing columns getting smaller is an improvement, not a
-regression, and a benchmark that reorders its columns between runs must
-not produce positional nonsense.  Records without headers (older
-artifacts, error rows) skip the column check.  A leading-underscore
-module name keeps this helper out of the runner's benchmark discovery.
+records alongside the rows (benchmarks/common.py).  Names that are
+unambiguously higher-is-better (``*speedup*``, ``*per_s*``) warn when
+their best (max) drops; the FUSED-path timing columns (``fused_ms`` /
+``fused_us`` — fig8/fig13's fused-vs-staged measurements) warn when
+their best (min) GROWS, so a fused-kernel slowdown is caught even when
+the staged baseline slows down alongside it and the speedup column
+stays flat.  Other timing columns are not diffed (getting smaller is an
+improvement), and a benchmark that reorders its columns between runs
+must not produce positional nonsense.  Records without headers (older
+artifacts, error rows) skip the column check.
+
+When both directories carry the persisted autotune cache
+(``autotune.json`` — kernels/autotune.py; CI points
+``$REPRO_AUTOTUNE_CACHE`` into the bench artifact dir), tile choices
+are warn-diffed too: a ``block_b``/``num_chunks`` flip between runs is
+exactly the "the tuner changed its mind" signal the persisted cache
+exists to surface.  A leading-underscore module name keeps this helper
+out of the runner's benchmark discovery.
 """
 import argparse
 import json
@@ -31,25 +42,65 @@ import sys
 
 
 _HIGHER_IS_BETTER = ("speedup", "per_s")
+#: fused-path timing columns (fig8/fig13): best = MIN, growth = warning
+_FUSED_TIMINGS = ("fused_ms", "fused_us")
+#: tuned fields of one autotune.json entry worth a flip warning
+_TUNED_FIELDS = ("block_b", "num_chunks")
 
 
-def _metric_column_maxes(rows, columns):
-    """Best (max) value per NAMED higher-is-better column; {} when the
-    record carries no usable header/rows."""
+def _column_values(rows, columns, name_filter):
+    """{column name: numeric values} for NAMED columns passing
+    ``name_filter``; {} when the record has no usable header/rows."""
     if (not isinstance(rows, list) or not rows
             or not isinstance(columns, list)
             or not all(isinstance(r, list) for r in rows)):
         return {}
     out = {}
     for c, name in enumerate(columns):
-        if not any(tag in str(name) for tag in _HIGHER_IS_BETTER):
+        if not name_filter(str(name)):
             continue
         vals = [r[c] for r in rows
                 if len(r) > c and isinstance(r[c], (int, float))
                 and not isinstance(r[c], bool)]
         if vals:
-            out[str(name)] = max(vals)
+            out[str(name)] = vals
     return out
+
+
+def _metric_column_maxes(rows, columns):
+    """Best (max) value per NAMED higher-is-better column."""
+    vals = _column_values(
+        rows, columns,
+        lambda n: any(tag in n for tag in _HIGHER_IS_BETTER))
+    return {name: max(v) for name, v in vals.items()}
+
+
+def _fused_column_mins(rows, columns):
+    """Best (min) value per NAMED fused-timing column."""
+    vals = _column_values(rows, columns,
+                          lambda n: n in _FUSED_TIMINGS)
+    return {name: min(v) for name, v in vals.items()}
+
+
+def diff_autotune(prev: dict, curr: dict) -> list:
+    """Tile-choice flips between two autotune.json caches (same format
+    as kernels/autotune.py writes)."""
+    notes = []
+    pe = prev.get("entries") if isinstance(prev, dict) else None
+    ce = curr.get("entries") if isinstance(curr, dict) else None
+    if not isinstance(pe, dict) or not isinstance(ce, dict):
+        return notes
+    for key in sorted(set(pe) & set(ce)):
+        po, co = pe[key], ce[key]
+        if not (isinstance(po, dict) and isinstance(co, dict)):
+            continue
+        for field in _TUNED_FIELDS:
+            pv, cv = po.get(field), co.get(field)
+            if pv is not None and cv is not None and pv != cv:
+                notes.append(
+                    f"autotune {key}: {field} flipped {pv} -> {cv} "
+                    f"({po.get('source')} -> {co.get('source')})")
+    return notes
 
 
 def diff_records(prev: dict, curr: dict, threshold: float) -> list:
@@ -75,6 +126,18 @@ def diff_records(prev: dict, curr: dict, threshold: float) -> list:
         if cv < pv * (1 - threshold):
             notes.append(f"{name}: {col} best value {pv:.4g} -> "
                          f"{cv:.4g} (-{(1 - cv / pv) * 100:.0f}%)")
+    prev_fused = _fused_column_mins(prev.get("rows"),
+                                    prev.get("columns"))
+    curr_fused = _fused_column_mins(curr.get("rows"),
+                                    curr.get("columns"))
+    for col, pv in prev_fused.items():
+        cv = curr_fused.get(col)
+        if cv is None or pv <= 0:
+            continue
+        if cv > pv * (1 + threshold):
+            notes.append(f"{name}: {col} best value {pv:.4g} -> "
+                         f"{cv:.4g} (+{(cv / pv - 1) * 100:.0f}%, "
+                         f"fused path slowed down)")
     return notes
 
 
@@ -107,6 +170,19 @@ def main(argv=None) -> int:
             warned += 1
         if not notes:
             print(f"[bench-diff] {curr_path.name}: ok")
+    prev_at, curr_at = prev_dir / "autotune.json", curr_dir / "autotune.json"
+    if prev_at.exists() and curr_at.exists():
+        try:
+            at_notes = diff_autotune(json.loads(prev_at.read_text()),
+                                     json.loads(curr_at.read_text()))
+        except (OSError, json.JSONDecodeError) as exc:
+            at_notes = []
+            print(f"[bench-diff] autotune.json: unreadable ({exc})")
+        for note in at_notes:
+            print(f"::warning title=autotune flip::{note}")
+            warned += 1
+        if not at_notes:
+            print("[bench-diff] autotune.json: tile choices stable")
     print(f"[bench-diff] {warned} regression warning(s) "
           f"(threshold {args.threshold:.0%})")
     return 0    # warn-only by design: annotations, never a failed job

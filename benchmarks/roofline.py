@@ -1,39 +1,148 @@
-"""Roofline report: reads results/dryrun/*.json (produced by
-repro.launch.dryrun) and emits the per-(arch x shape x mesh) three-term
-table for EXPERIMENTS.md §Roofline."""
-import glob
-import json
-import pathlib
+"""Roofline report for the staged-table serving kernels + autotune prior.
 
-from .common import emit
+Replaces the old dry-run reader, which silently no-oped unless a
+``results/dryrun`` directory existed.  Per (family, n) this builds a
+real staged table pair and emits its geometry (S stages x P lanes), the
+EXACT bytes one fused operator dispatch touches (two int32 index tables
+plus the family's value tables per leg, the signal block in/out and the
+diagonal), the paper-model FLOPs (Table 1: 6 per Givens entry, <= 2 per
+shear/scale entry), the resulting arithmetic intensity, and a measured
+micro timing of the fused operator plan (kernels/plan.py).
 
-RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+The same analytic model then seeds the persisted autotune cache
+(kernels/autotune.py) with ``source="prior"`` entries: a
+``prior_block_b`` tile per plan key the grid covers, plus the
+stage-chunk depth-overhead scan (finer cut ladders pack deeper — the
+scan records the finest granularity that stays within ~10% extra
+depth).  Measurements (e.g. fig13's tuner pass) refine priors to
+``source="measured"``; a prior never overwrites a measurement.
+"""
+import numpy as np
+
+from .common import emit, time_call
+
+#: per-entry FLOPs of one staged table entry (paper Table 1): a Givens
+#: rotation costs 6; shears cost 2 and scalings 1 — the shear bound
+#: keeps padded entries honest (the kernels execute those too).
+ENTRY_FLOPS = {"sym": 6, "general": 2}
+#: value tables per entry next to the two int32 index tables
+#: (c/s/sigma for G, alpha/beta for T — core/staging.py).
+VALUE_TABLES = {"sym": 3, "general": 2}
+
+#: depth overhead budget for the chunk-granularity prior: the finest
+#: ladder whose packed depth stays within this fraction of the 1-chunk
+#: schedule wins.
+CHUNK_OVERHEAD_BUDGET = 0.10
+
+
+def _chain(family, n, g, seed=0):
+    """One fitted factor chain + spectrum (n_iter=1: the roofline cares
+    about table geometry and timings, not approximation quality)."""
+    import jax.numpy as jnp
+    from repro.core import approximate_general, approximate_symmetric
+    a = np.random.default_rng(seed).standard_normal((n, n)).astype(
+        np.float32)
+    if family == "sym":
+        factors, spec, _ = approximate_symmetric(jnp.asarray(a + a.T),
+                                                 g=g, n_iter=1)
+    else:
+        factors, spec, _ = approximate_general(jnp.asarray(a), m=g,
+                                               n_iter=1)
+    return factors, spec
+
+
+def _pack(family, factors, n, num_chunks=None):
+    from repro.core import staging
+    cuts = None
+    if num_chunks is not None:
+        g = (factors.g if family == "sym" else len(factors.kind))
+        cuts = staging.default_cut_ladder(int(g), num_chunks).tolist()
+    if family == "sym":
+        return staging.pack_g_pair(factors, cuts=cuts)
+    return staging.pack_t_pair(factors, n, cuts=cuts)
+
+
+def _seed_priors(family, n, s, p, autotune, plan_cls):
+    """Analytic ``source="prior"`` tile entries for every plan key this
+    (family, n) geometry serves; returns the operator-mode prior for the
+    report row."""
+    values = VALUE_TABLES[family]
+    out = None
+    for mode in ("apply", "operator", "bank"):
+        legs = 1 if mode == "apply" else 2
+        bb = autotune.prior_block_b(n, s, p, values=values, legs=legs)
+        for batched in (False, True):
+            plan = plan_cls(family=family, mode=mode, n=n,
+                            batched=batched)
+            autotune.record(autotune.plan_key(plan), source="prior",
+                            block_b=bb)
+        if mode == "operator":
+            out = bb
+    return out
+
+
+def _chunk_prior(family, factors, n, autotune):
+    """Depth-overhead scan over the cut-ladder granularities: packs the
+    SAME chain at each candidate and records the finest ladder within
+    the depth budget."""
+    depths = {}
+    for k in autotune.CHUNK_CANDIDATES:
+        fwd, _ = _pack(family, factors, n, num_chunks=k)
+        depths[k] = int(fwd.idx_i.shape[-2])
+    base = max(depths[min(depths)], 1)
+    overhead = {str(k): round(d / base - 1.0, 4)
+                for k, d in depths.items()}
+    best = max(k for k, d in depths.items()
+               if d / base - 1.0 <= CHUNK_OVERHEAD_BUDGET)
+    autotune.record(autotune.chunk_key(family, n), source="prior",
+                    num_chunks=int(best), depth_overhead=overhead)
+    return best
 
 
 def run(fast: bool = False):
+    import jax.numpy as jnp
+    from repro.kernels import autotune
+    from repro.kernels.plan import ApplyPlan
+
+    ns = (32, 64) if fast else (32, 64, 128)
+    signal_rows = 16 if fast else 64
+    rng = np.random.default_rng(0)
     rows = []
-    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
-        d = json.load(open(f))
-        if d.get("overrides"):
-            continue  # perf-experiment variants tabulated in §Perf
-        r = d["roofline"]
-        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
-        rows.append([
-            d["arch"], d["shape"], d["mesh"],
-            f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
-            f"{r['collective_s']:.3e}", r["dominant"],
-            f"{d['hbm_gb_per_chip']:.2f}",
-            f"{d['useful_flop_frac']:.3f}",
-            f"{r['compute_s'] / max(total, 1e-30):.3f}",
-        ])
-    if not rows:
-        print("## roofline: no dry-run results found (run "
-              "python -m repro.launch.dryrun --all first)")
-        return []
-    emit("roofline (terms in seconds/step; useful = MODEL_FLOPS/HLO_FLOPS)",
-         rows, ["arch", "shape", "mesh", "compute_s", "memory_s",
-                "collective_s", "dominant", "hbm_gb_chip", "useful_frac",
-                "roofline_frac"])
+    for family in ("sym", "general"):
+        for n in ns:
+            g = int(2 * n * np.log2(n))
+            factors, spec = _chain(family, n, g)
+            fwd, bwd = _pack(family, factors, n)
+            s, p = fwd.idx_i.shape
+            values = VALUE_TABLES[family]
+            # one fused operator dispatch: both legs' tables + signal
+            # in/out + the diagonal, all touched exactly once
+            table_bytes = 2 * s * p * (2 * 4 + values * 4)
+            moved_bytes = table_bytes + (2 * signal_rows * n + n) * 4
+            flops = signal_rows * (2 * s * p * ENTRY_FLOPS[family] + n)
+            plan = ApplyPlan(family=family, mode="operator", n=n)
+            prog = plan.program()
+            ft, bt = plan.prepare(fwd), plan.prepare(bwd)
+            x = jnp.asarray(rng.standard_normal(
+                (signal_rows, n)).astype(np.float32))
+            d = jnp.asarray(spec)
+            t = time_call(prog, ft, bt, d, x)
+            bb = _seed_priors(family, n, s, p, autotune, ApplyPlan)
+            chunks = _chunk_prior(family, factors, n, autotune)
+            rows.append([
+                family, n, g, s, p,
+                round(table_bytes / 1024.0, 2),
+                round(flops / max(moved_bytes, 1), 3),
+                round(t * 1e6, 1),
+                round(flops / max(t, 1e-12) / 1e9, 3),
+                bb, chunks,
+            ])
+    emit("roofline (fused operator dispatch; bytes model seeds the "
+         "autotune prior)",
+         rows, ["family", "n", "g", "stages", "lanes", "table_kb",
+                "flops_per_byte", "xla_us", "gflops_per_s",
+                "prior_block_b", "prior_chunks"])
+    print(f"[roofline] autotune priors -> {autotune.cache_path()}")
     return rows
 
 

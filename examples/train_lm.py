@@ -6,7 +6,9 @@ optimization feature).
   PYTHONPATH=src python examples/train_lm.py [--steps 200] [--compress]
 
 This is the CPU-scale version of ``python -m repro.launch.train``; the
-same code path drives the production mesh.
+same code path drives the production mesh.  ``--smoke`` swaps in a toy
+config (2 layers, d_model 64) and a handful of steps — the CI examples
+job uses it so the driver cannot rot without paying a full compile.
 """
 import argparse
 
@@ -16,37 +18,52 @@ from repro.models import transformer as tfm
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--compress", action="store_true",
                     help="butterfly EF gradient compression (ratio 0.25)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy config + 4 steps (CI examples job)")
     args = ap.parse_args()
 
-    # ~100M params: 8 layers, d_model 512, vocab 32k (qwen2 family)
     import repro.configs.qwen2_1_5b as q
-    cfg = q.CONFIG.replace(n_layers=8, d_model=512, n_heads=8, n_kv_heads=2,
-                           head_dim=64, d_ff=1536, vocab=32768,
-                           attn_chunk=256)
+    if args.smoke:
+        # toy config: same code path, seconds of compile
+        cfg = q.CONFIG.replace(n_layers=2, d_model=64, n_heads=4,
+                               n_kv_heads=2, head_dim=16, d_ff=128,
+                               vocab=512, attn_chunk=64)
+        steps = args.steps if args.steps is not None else 4
+        seq_len, batch = "64", "4"
+    else:
+        # ~100M params: 8 layers, d_model 512, vocab 32k (qwen2 family)
+        cfg = q.CONFIG.replace(n_layers=8, d_model=512, n_heads=8,
+                               n_kv_heads=2, head_dim=64, d_ff=1536,
+                               vocab=32768, attn_chunk=256)
+        steps = args.steps if args.steps is not None else 200
+        seq_len, batch = "256", "8"
     import jax
     params, _ = tfm.init_params(cfg, jax.random.PRNGKey(0), abstract=True)
     n_params = sum(int(__import__("numpy").prod(p.shape))
                    for p in jax.tree.leaves(params))
     print(f"model: {n_params / 1e6:.1f}M params")
 
-    argv = ["--arch", "qwen2-1.5b", "--steps", str(args.steps),
-            "--seq-len", "256", "--global-batch", "8",
+    argv = ["--arch", "qwen2-1.5b", "--steps", str(steps),
+            "--seq-len", seq_len, "--global-batch", batch,
             "--ckpt-every", "100", "--log-every", "20",
             "--peak-lr", "1e-3"]
     if args.compress:
         argv += ["--grad-compress-ratio", "0.25"]
 
-    # drive the real launcher but with the 100M config injected
-    import repro.configs.registry as reg
-    orig = reg.get_config
-    reg.get_config = lambda name, smoke=False: cfg
+    # drive the real launcher but with the reduced config injected.
+    # Patch the name in the LAUNCHER's namespace: train.py binds
+    # ``get_config`` at import (``from repro.configs import ...``), so
+    # patching the registry module would silently leave the full 1.5B
+    # config in play.
+    orig = train_mod.get_config
+    train_mod.get_config = lambda name, smoke=False: cfg
     try:
         final_loss = train_mod.main(argv)
     finally:
-        reg.get_config = orig
+        train_mod.get_config = orig
     print(f"final loss {final_loss:.4f} (random-token floor would be "
           f"{__import__('numpy').log(cfg.vocab):.2f}; the synthetic stream "
           "is 2/3 learnable patterns)")

@@ -466,37 +466,39 @@ class ApproxEigenbasis:
                           factors=factors, spectrum=sbar, fwd=fwd, bwd=bwd,
                           objective=obj, info=info, sizes=self.sizes)
 
-    # -- application -------------------------------------------------------
+    # -- application (plan-backed: one cached program per shape; ----------
+    # -- DESIGN.md §13) ----------------------------------------------------
 
-    def _ops(self):
-        from repro.kernels import ops as kops
-        return kops
+    def _plan(self, mode: str, backend: str, num_stages: Optional[int],
+              precision: str, keep: str = "head", fused: bool = True):
+        from repro.kernels.plan import ApplyPlan
+        return ApplyPlan(family=self.kind, mode=mode, n=self.n,
+                         batched=self.batched, backend=backend,
+                         num_stages=num_stages, keep=keep,
+                         precision=precision, fused=fused)
 
     def apply(self, x: jnp.ndarray, inverse: bool = False,
-              backend: str = "xla",
-              num_stages: Optional[int] = None) -> jnp.ndarray:
+              backend: str = "xla", num_stages: Optional[int] = None,
+              precision: str = "f32") -> jnp.ndarray:
         """y = Ubar x (or Tbar x); ``inverse=True`` applies Ubar^T /
         Tbar^{-1} (graph Fourier ANALYSIS; forward is SYNTHESIS).
 
         ``x``: (..., n), with a leading (B, ...) batch when ``batched``.
         ``num_stages`` runs the anytime prefix (pick a boundary with
-        ``select_tier``; DESIGN.md §9).
+        ``select_tier``; DESIGN.md §9).  ``precision="bf16"`` runs bf16
+        table storage with f32 accumulation (DESIGN.md §13).
         """
-        kops = self._ops()
+        from repro.kernels.plan import leg_orientation
         staged = self.bwd if inverse else self.fwd
-        if self.kind == SYMMETRIC:
-            fn = kops.batched_g_apply if self.batched else kops.g_apply
-            keep = "head" if inverse else "tail"
-        else:
-            fn = kops.batched_t_apply if self.batched else kops.t_apply
-            keep = "tail" if inverse else "head"
-        return fn(staged, x, backend=backend, num_stages=num_stages,
-                  keep=keep)
+        keep = leg_orientation(self.kind)[0 if inverse else 1]
+        plan = self._plan("apply", backend, num_stages, precision, keep)
+        return plan.apply(staged, x)
 
     def project(self, x: jnp.ndarray,
                 h: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
                 backend: str = "xla",
-                num_stages: Optional[int] = None) -> jnp.ndarray:
+                num_stages: Optional[int] = None,
+                precision: str = "f32", fused: bool = True) -> jnp.ndarray:
         """Apply the reconstructed operator (a spectral projection/filter):
 
             y = Ubar diag(h(spectrum)) Ubar^T x      (symmetric)
@@ -510,21 +512,18 @@ class ApproxEigenbasis:
         gains are zeroed at each matrix's padding coordinates — the padded
         spectrum slots are 0 but ``h(0)`` need not be (heat/Tikhonov map
         0 -> 1), and the transforms pass pad coordinates through, so an
-        unmasked ``h`` would leak pad columns of ``x`` into the output."""
-        kops = self._ops()
+        unmasked ``h`` would leak pad columns of ``x`` into the output.
+        ``precision="bf16"``/``fused=False`` select the plan layer's
+        storage-precision and three-pass baseline paths (DESIGN.md
+        §13)."""
         d = self.spectrum if h is None else h(self.spectrum)
         if h is not None and self.sizes is not None:
             valid = (np.arange(self.n)
                      < np.asarray(self.sizes)[..., None])
             d = jnp.where(jnp.asarray(valid), d, 0.0)
-        if self.kind == SYMMETRIC:
-            fn = (kops.batched_sym_operator if self.batched
-                  else kops.sym_operator)
-        else:
-            fn = (kops.batched_gen_operator if self.batched
-                  else kops.gen_operator)
-        return fn(self.fwd, self.bwd, d, x, backend=backend,
-                  num_stages=num_stages)
+        plan = self._plan("operator", backend, num_stages, precision,
+                          fused=fused)
+        return plan.operator(self.fwd, self.bwd, d, x)
 
     def to_dense(self, num_stages: Optional[int] = None) -> jnp.ndarray:
         """Materialize the basis: Ubar / Tbar as (n, n) or (B, n, n)

@@ -21,7 +21,7 @@ from . import gtransform as gt
 from . import ttransform as tt
 from .staging import StagedG, StagedT, pack_g_pair, pack_t_pair, select_cut
 from .types import GFactors, TFactors
-from repro.kernels import ops as kops
+from repro.kernels.plan import ApplyPlan, leg_orientation
 
 
 def laplacian(adj: np.ndarray, normalized: bool = False) -> np.ndarray:
@@ -57,47 +57,54 @@ class FGFT:
     bwd: Optional[StagedG | StagedT] = None  # adjoint (G) or inverse (T)
     objective: float = float("nan")
 
-    # -- ops ---------------------------------------------------------------
+    # -- ops (plan-backed: one cached program per shape; DESIGN.md §13) ----
+    def _plan(self, mode: str, backend: str, num_stages: Optional[int],
+              precision: str, keep: str = "head",
+              fused: bool = True) -> ApplyPlan:
+        return ApplyPlan(family="general" if self.directed else "sym",
+                         mode=mode, n=self.n, backend=backend,
+                         num_stages=num_stages, keep=keep,
+                         precision=precision, fused=fused)
+
     def analysis(self, x: jnp.ndarray, backend: str = "xla",
-                 num_stages: Optional[int] = None) -> jnp.ndarray:
+                 num_stages: Optional[int] = None,
+                 precision: str = "f32") -> jnp.ndarray:
         """Graph Fourier coefficients  x_hat = Ubar^T x  (or Tbar^{-1} x).
 
         x: (..., n) -> (..., n), same dtype.  Cost 6g (G) or m1+2m2 (T)
         flops per vector — paper Table 1 (vs 2n^2 dense).  ``num_stages``
         runs the anytime prefix transform: only the stages covering the
         leading components (pick a boundary via ``self.stage_cuts``;
-        DESIGN.md §9)."""
-        if self.directed:
-            return kops.t_apply(self.bwd, x, backend=backend,
-                                num_stages=num_stages, keep="tail")
-        return kops.g_apply(self.bwd, x, backend=backend,
-                            num_stages=num_stages, keep="head")
+        DESIGN.md §9).  ``precision="bf16"`` runs bf16 table storage
+        with f32 accumulation (DESIGN.md §13)."""
+        keep = leg_orientation("general" if self.directed else "sym")[0]
+        plan = self._plan("apply", backend, num_stages, precision, keep)
+        return plan.apply(self.bwd, x)
 
     def synthesis(self, xh: jnp.ndarray, backend: str = "xla",
-                  num_stages: Optional[int] = None) -> jnp.ndarray:
+                  num_stages: Optional[int] = None,
+                  precision: str = "f32") -> jnp.ndarray:
         """Inverse transform  x = Ubar x_hat  (or Tbar x_hat): (..., n) ->
         (..., n).  Exact inverse of ``analysis`` for the G case
         (orthonormal); for T it inverts up to f32 conditioning of Tbar."""
-        if self.directed:
-            return kops.t_apply(self.fwd, xh, backend=backend,
-                                num_stages=num_stages, keep="head")
-        return kops.g_apply(self.fwd, xh, backend=backend,
-                            num_stages=num_stages, keep="tail")
+        keep = leg_orientation("general" if self.directed else "sym")[1]
+        plan = self._plan("apply", backend, num_stages, precision, keep)
+        return plan.apply(self.fwd, xh)
 
     def filter(self, x: jnp.ndarray, h: Callable[[jnp.ndarray], jnp.ndarray],
-               backend: str = "xla",
-               num_stages: Optional[int] = None) -> jnp.ndarray:
+               backend: str = "xla", num_stages: Optional[int] = None,
+               precision: str = "f32", fused: bool = True) -> jnp.ndarray:
         """Spectral filter  y = Ubar diag(h(spectrum)) Ubar^T x  (or the
         Tbar form) — eq. (2)/(7) as an operator.  ``h`` maps (n,) graph
         frequencies to (n,) gains; x: (..., n).  ``backend="pallas"`` runs
         the fused one-round-trip kernel (DESIGN.md §4); ``num_stages``
-        truncates both transform legs to the same component prefix."""
+        truncates both transform legs to the same component prefix;
+        ``fused=False`` runs the three-pass staged baseline (parity /
+        benchmarking; DESIGN.md §13)."""
         d = h(self.spectrum)
-        if self.directed:
-            return kops.gen_operator(self.fwd, self.bwd, d, x,
-                                     backend=backend, num_stages=num_stages)
-        return kops.sym_operator(self.fwd, self.bwd, d, x, backend=backend,
-                                 num_stages=num_stages)
+        plan = self._plan("operator", backend, num_stages, precision,
+                          fused=fused)
+        return plan.operator(self.fwd, self.bwd, d, x)
 
     @property
     def stage_cuts(self) -> np.ndarray:

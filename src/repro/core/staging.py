@@ -119,6 +119,34 @@ def table_arrays(staged) -> Tuple:
     return tuple(staged[:len(_table_fields(staged))])
 
 
+TABLE_PRECISIONS = ("f32", "bf16")
+
+
+def with_precision(staged, precision: str):
+    """Staged tables under a storage-precision policy.
+
+    ``"f32"`` is the packing default (returned unchanged).  ``"bf16"``
+    casts the VALUE tables (c/s/sigma for G, alpha/beta for T) to
+    bfloat16 — index tables stay int32, and the ``cuts``/``n`` metadata
+    is untouched, so every cut ladder and program cache key survives the
+    cast.  Accumulation stays f32: the apply kernels cast table entries
+    to the SIGNAL dtype at compute time (kernels/ref.py, butterfly.py,
+    shear.py), so an f32 signal against bf16 tables upcasts each entry
+    and accumulates in f32 — bf16 is purely a storage/bandwidth policy
+    (half the table VMEM footprint; DESIGN.md §13).  The accuracy cost
+    is bounded by the same ``2 Lip(h) delta`` accounting as the
+    factorization error itself (tests/test_plan.py, fig13)."""
+    if precision not in TABLE_PRECISIONS:
+        raise ValueError(f"precision must be one of {TABLE_PRECISIONS}, "
+                         f"got {precision!r}")
+    dtype = jnp.float32 if precision == "f32" else jnp.bfloat16
+    values = _table_fields(staged)[2:]          # skip idx_i / idx_j
+    if all(getattr(staged, f).dtype == dtype for f in values):
+        return staged
+    return staged._replace(**{f: getattr(staged, f).astype(dtype)
+                              for f in values})
+
+
 # ---------------------------------------------------------------------------
 # Prefix metadata helpers
 # ---------------------------------------------------------------------------

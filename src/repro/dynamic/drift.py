@@ -33,33 +33,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.staging import StagedG, StagedT, table_arrays as _tables
+from repro.core.staging import table_arrays as _tables
+from repro.kernels.plan import ApplyPlan
 
 _EPS = 1e-30
 
 
 @functools.lru_cache(maxsize=None)
-def _residual_program(kind: str, batched: bool, n: int, num_probes: int):
+def _residual_program(plan, num_probes: int):
     """Cached jitted Hutchinson pass: (fwd tables, bwd tables, spectrum,
-    laps, key) -> estimated relative residual, (B,) or scalar.  Tables
-    are ARGUMENTS (not closure constants) so a hot-swapped basis version
-    with unchanged shapes reuses the compiled program."""
-    from repro.kernels import ops as kops
-    cls = StagedG if kind == "sym" else StagedT
-    if kind == "sym":
-        op = kops.batched_sym_operator if batched else kops.sym_operator
-    else:
-        op = kops.batched_gen_operator if batched else kops.gen_operator
+    laps, key) -> estimated relative residual, (B,) or scalar.  Keyed on
+    the (hashable) ``ApplyPlan`` that names the operator — tables are
+    ARGUMENTS (not closure constants) so a hot-swapped basis version
+    with unchanged shapes reuses the compiled program; the plan's
+    unjitted ``table_op`` embeds in this larger jitted probe pass
+    instead of compiling its own program (DESIGN.md §13)."""
+    op = plan.table_op()
+    n, batched = plan.n, plan.batched
 
     def program(fwd_t, bwd_t, spectrum, laps, key):
-        fwd = cls(*fwd_t, None, n)
-        bwd = cls(*bwd_t, None, n)
         z = jax.random.rademacher(key, (num_probes, n), jnp.float32)
         if batched:
             z = jnp.broadcast_to(z, (laps.shape[0], num_probes, n))
         # (L' - recon) z, per probe: dense matvec + fused staged operator
         lz = jnp.einsum("...ij,...kj->...ki", laps, z)
-        rz = lz - op(fwd, bwd, spectrum, z)
+        rz = lz - op(fwd_t, bwd_t, spectrum, z)
         est = jnp.mean(jnp.sum(rz * rz, axis=-1), axis=-1)
         den = jnp.maximum(jnp.sum(laps * laps, axis=(-2, -1)), _EPS)
         return est / den
@@ -74,8 +72,9 @@ def estimate_rel_residual(basis, laps, *, num_probes: int = 8,
     probes; relative std ~ sqrt(2 / num_probes).  Never forms a dense
     reconstruction or eigendecomposition."""
     laps = jnp.asarray(laps, jnp.float32)
-    prog = _residual_program(basis.kind, basis.batched, basis.n,
-                             int(num_probes))
+    plan = ApplyPlan(family=basis.kind, mode="operator", n=basis.n,
+                     batched=basis.batched)
+    prog = _residual_program(plan, int(num_probes))
     return np.asarray(prog(_tables(basis.fwd), _tables(basis.bwd),
                            basis.spectrum, laps,
                            jax.random.PRNGKey(seed)))

@@ -1,2 +1,8 @@
-"""Pallas TPU kernels (validated in interpret mode) + XLA reference path."""
-from . import ops, ref, butterfly, shear, spectral
+"""Pallas TPU kernels (validated in interpret mode) + XLA reference path.
+
+Dispatch is declarative: ``plan.ApplyPlan`` names a staged-table
+computation and compiles it to one cached program (DESIGN.md §13);
+``ops`` keeps the pre-plan wrapper names as deprecated shims, and
+``autotune`` persists the Pallas tile choices the plans resolve."""
+from . import autotune, ops, plan, ref, butterfly, shear, spectral
+from .plan import ApplyPlan

@@ -1,35 +1,34 @@
-"""Public jit'd kernel wrappers with an ``xla | pallas`` backend switch.
+"""DEPRECATED compatibility shims over the plan layer (kernels/plan.py).
 
-``backend="xla"`` routes to the pure-jnp oracle (ref.py) — this is the path
-the 512-device dry-run lowers (Pallas TPU kernels cannot lower on the CPU
-backend; DESIGN.md §4).  ``backend="pallas"`` routes to the Pallas kernels;
-in this container they execute with ``interpret=True``.
+Every function here is a thin alias that builds an ``ApplyPlan`` and
+runs its cached program — kept so existing call sites and notebooks
+survive, but new code should construct plans directly: the plan is the
+ONE place family/mode/batching/cut/backend/precision dispatch is wired
+(DESIGN.md §13), and plan programs are process-cached so hot-swapped
+tables with unchanged shapes never recompile (DESIGN.md §11).
 
-Shape/dtype conventions (DESIGN.md §4):
+Shape/dtype conventions (unchanged; DESIGN.md §4):
   * single-matrix staged tables are (S, P) — S conflict-free stages of
-    width P (core/staging.py); batched tables carry a leading matrix-batch
-    dim: (B, S, P) (DESIGN.md §7).
+    width P (core/staging.py); batched tables carry a leading matrix-
+    batch dim: (B, S, P) (DESIGN.md §7).
   * signals put coordinates on the LAST axis: x is (..., n) for the
     single-matrix ops and (B, ..., n) for the batched ops.
-  * tables are stored f32; the apply casts them to ``x.dtype`` (bf16
-    signals are supported — see tests/test_kernels.py dtype sweeps).
+  * tables are stored f32 by default; the apply casts them to
+    ``x.dtype`` (bf16 signals are supported — see tests/test_kernels.py
+    dtype sweeps).  For bf16 TABLE storage with f32 accumulation use a
+    plan with ``precision="bf16"`` (core/staging.py::with_precision).
 
-Ragged fleets (DESIGN.md §10): a masked (size-bucketed) fit's tables act
-as the identity on each matrix's padding coordinates, so these ops need
-no extra arguments for ragged batches — plain applies pass padded signal
-coordinates through untouched, and the fused operators zero them (the
-padded spectrum is zero).  Parity against per-matrix own-size fits is
-asserted in tests/test_ragged.py.
+Ragged fleets (DESIGN.md §10): a masked (size-bucketed) fit's tables
+act as the identity on each matrix's padding coordinates, so these ops
+need no extra arguments for ragged batches.  Anytime prefixes
+(DESIGN.md §9): every op takes a static ``num_stages``; the fused
+operators cut both legs consistently, the plain applies additionally
+take ``keep`` ("tail" for G fwd / T inverse tables, "head" for
+G adjoint / T fwd — kernels/plan.py::leg_orientation).
 
-Anytime prefixes (DESIGN.md §9): every op takes a static ``num_stages``.
-``None`` runs the full chain; an integer cuts the staged tables at that
-stage boundary, so a truncated transform costs proportionally fewer
-stages.  Exact component prefixes live at the boundaries recorded in
-``staged.cuts`` (core/staging.py::select_cut picks one).  The fused
-operators cut both legs consistently; the plain applies additionally take
-``keep`` because the significant stages sit at the head or tail of a
-table set depending on family and direction: G fwd / T inverse -> "tail",
-G adjoint / T fwd -> "head".
+The batched/unbatched wrapper pairs collapse onto the same plans (the
+plan infers batching from the table rank); both names remain as
+deprecated aliases.
 """
 from __future__ import annotations
 
@@ -37,243 +36,132 @@ import jax.numpy as jnp
 
 from repro.core.staging import StagedG, StagedT, pack_g_pair, pack_t_pair
 from repro.core.types import GFactors, TFactors
-from . import butterfly as _bf
-from . import ref as _ref
-from . import shear as _sh
-from . import spectral as _sp
+from .plan import ApplyPlan
+
+
+def _apply(staged, x, backend, interpret, num_stages, keep):
+    return ApplyPlan.for_staged(
+        staged, mode="apply", backend=backend, interpret=interpret,
+        num_stages=num_stages, keep=keep).apply(staged, x)
+
+
+def _operator(fwd, bwd, diag, x, backend, interpret, num_stages):
+    return ApplyPlan.for_staged(
+        fwd, mode="operator", backend=backend, interpret=interpret,
+        num_stages=num_stages).operator(fwd, bwd, diag, x)
+
+
+def _bank(fwd, bwd, gains, x, backend, interpret, num_stages):
+    return ApplyPlan.for_staged(
+        fwd, mode="bank", backend=backend, interpret=interpret,
+        num_stages=num_stages).bank(fwd, bwd, gains, x)
 
 
 def g_apply(staged: StagedG, x: jnp.ndarray, backend: str = "xla",
             interpret: bool = True, num_stages: int | None = None,
             keep: str = "head") -> jnp.ndarray:
-    """y = Ubar x — the product of extended Givens transforms, eq. (5).
-
-    ``staged``: (S, P) tables; ``x``: (..., n), any float dtype.  Returns
-    the same shape/dtype as ``x``.  Cost 6g flops (paper Table 1), or 6g'
-    under a ``num_stages`` prefix cut (``keep="tail"`` for forward/
-    synthesis tables, ``"head"`` for adjoint/analysis tables)."""
-    if backend == "xla":
-        return _ref.staged_g_apply(staged, x, num_stages, keep)
-    if backend == "pallas":
-        flat = x.reshape(-1, x.shape[-1])
-        return _bf.butterfly_apply(
-            staged, flat, interpret=interpret, num_stages=num_stages,
-            keep=keep).reshape(x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: y = Ubar x — the product of extended Givens
+    transforms, eq. (5).  ``staged``: (S, P) tables; ``x``: (..., n),
+    any float dtype.  Cost 6g flops (paper Table 1), or 6g' under a
+    ``num_stages`` prefix cut."""
+    return _apply(staged, x, backend, interpret, num_stages, keep)
 
 
 def t_apply(staged: StagedT, x: jnp.ndarray, backend: str = "xla",
             interpret: bool = True, num_stages: int | None = None,
             keep: str = "head") -> jnp.ndarray:
-    """y = Tbar x — the product of scaling/shear transforms, eq. (10).
-
-    ``staged``: (S, P) tables; ``x``: (..., n).  Cost 1 flop per scaling
-    and 2 per shear (paper Table 1).  ``keep="head"`` for forward tables,
-    ``"tail"`` for inverse tables under a prefix cut."""
-    if backend == "xla":
-        return _ref.staged_t_apply(staged, x, num_stages, keep)
-    if backend == "pallas":
-        flat = x.reshape(-1, x.shape[-1])
-        return _sh.shear_apply(
-            staged, flat, interpret=interpret, num_stages=num_stages,
-            keep=keep).reshape(x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: y = Tbar x — the product of scaling/shear
+    transforms, eq. (10).  Cost 1 flop per scaling and 2 per shear."""
+    return _apply(staged, x, backend, interpret, num_stages, keep)
 
 
 def sym_operator(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
                  x: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True,
                  num_stages: int | None = None) -> jnp.ndarray:
-    """Sbar x = Ubar diag(d) Ubar^T x — eq. (2) applied as an operator.
-
-    ``fwd``/``adj`` are the staged Ubar and Ubar^T (ops.stage_g), ``diag``
-    is (n,), ``x`` is (..., n).  The pallas backend fuses all three legs in
-    one VMEM round trip (DESIGN.md §4).  ``num_stages`` truncates both
-    legs to the same component prefix (DESIGN.md §9)."""
-    if backend == "xla":
-        return _ref.sym_operator_apply(fwd, adj, diag, x, num_stages)
-    if backend == "pallas":
-        flat = x.reshape(-1, x.shape[-1])
-        return _bf.sym_operator_apply(
-            fwd, adj, diag, flat, interpret=interpret,
-            num_stages=num_stages).reshape(x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: Sbar x = Ubar diag(d) Ubar^T x — eq. (2) as a
+    fused operator (one VMEM round trip on the pallas backend;
+    ``num_stages`` truncates both legs to the same component prefix)."""
+    return _operator(fwd, adj, diag, x, backend, interpret, num_stages)
 
 
 def gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
                  x: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True,
                  num_stages: int | None = None) -> jnp.ndarray:
-    """Cbar x = Tbar diag(d) Tbar^{-1} x — eq. (7) applied as an operator.
+    """Deprecated shim: Cbar x = Tbar diag(d) Tbar^{-1} x — eq. (7) as
+    a fused operator."""
+    return _operator(fwd, inv, diag, x, backend, interpret, num_stages)
 
-    ``fwd``/``inv`` are the staged Tbar and Tbar^{-1} (ops.stage_t),
-    ``diag`` is (n,), ``x`` is (..., n)."""
-    if backend == "xla":
-        return _ref.gen_operator_apply(fwd, inv, diag, x, num_stages)
-    if backend == "pallas":
-        flat = x.reshape(-1, x.shape[-1])
-        return _sh.gen_operator_apply(
-            fwd, inv, diag, flat, interpret=interpret,
-            num_stages=num_stages).reshape(x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
-
-
-# ---------------------------------------------------------------------------
-# Batched operators: one call serves B independent factorizations
-# (DESIGN.md §7; used by core/eigenbasis.py and launch/serve.py --fgft)
-# ---------------------------------------------------------------------------
 
 def batched_sym_operator(fwd: StagedG, adj: StagedG, diag: jnp.ndarray,
                          x: jnp.ndarray, backend: str = "xla",
                          interpret: bool = True,
                          num_stages: int | None = None) -> jnp.ndarray:
-    """y[b] = Ubar_b diag(d_b) Ubar_b^T x[b] for every matrix b.
-
-    ``fwd``/``adj``: batched staged tables (B, S, P) from
-    core/staging.py::pack_g_batch; ``diag``: (B, n); ``x``: (B, ..., n).
-    The pallas path maps the matrix batch onto the first kernel grid axis;
-    the xla path is the vmapped oracle (ref.py).  A ``num_stages`` cut is
-    uniform across the batch (chunk-uniform padding, DESIGN.md §9)."""
-    if backend == "xla":
-        return _ref.batched_sym_operator_apply(fwd, adj, diag, x,
-                                               num_stages)
-    if backend == "pallas":
-        b = x.shape[0]
-        flat = x.reshape(b, -1, x.shape[-1])
-        return _bf.batched_sym_operator_apply(
-            fwd, adj, diag, flat, interpret=interpret,
-            num_stages=num_stages).reshape(x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: y[b] = Ubar_b diag(d_b) Ubar_b^T x[b] — tables
+    (B, S, P), ``diag`` (B, n), ``x`` (B, ..., n); one dispatch serves
+    the whole fleet (DESIGN.md §7)."""
+    return _operator(fwd, adj, diag, x, backend, interpret, num_stages)
 
 
 def batched_gen_operator(fwd: StagedT, inv: StagedT, diag: jnp.ndarray,
                          x: jnp.ndarray, backend: str = "xla",
                          interpret: bool = True,
                          num_stages: int | None = None) -> jnp.ndarray:
-    """y[b] = Tbar_b diag(d_b) Tbar_b^{-1} x[b] for every matrix b.
+    """Deprecated shim: y[b] = Tbar_b diag(d_b) Tbar_b^{-1} x[b]."""
+    return _operator(fwd, inv, diag, x, backend, interpret, num_stages)
 
-    ``fwd``/``inv``: batched staged tables (B, S, P) from
-    core/staging.py::pack_t_batch; ``diag``: (B, n); ``x``: (B, ..., n)."""
-    if backend == "xla":
-        return _ref.batched_gen_operator_apply(fwd, inv, diag, x,
-                                               num_stages)
-    if backend == "pallas":
-        b = x.shape[0]
-        flat = x.reshape(b, -1, x.shape[-1])
-        return _sh.batched_gen_operator_apply(
-            fwd, inv, diag, flat, interpret=interpret,
-            num_stages=num_stages).reshape(x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
-
-
-# ---------------------------------------------------------------------------
-# Filter banks: F spectral responses served through ONE analysis pass
-# (repro/spectral/filters.py; DESIGN.md §8)
-# ---------------------------------------------------------------------------
 
 def sym_filter_bank(fwd: StagedG, adj: StagedG, gains: jnp.ndarray,
                     x: jnp.ndarray, backend: str = "xla",
                     interpret: bool = True,
                     num_stages: int | None = None) -> jnp.ndarray:
-    """y[f] = Ubar diag(gains_f) Ubar^T x for a bank of F filters.
-
-    ``gains``: (F, n), ``x``: (..., n) -> (F, ..., n).  The analysis leg
-    runs once and is shared by all F filters; the pallas path additionally
-    fuses the whole bank into one kernel launch (kernels/spectral.py)."""
-    if backend == "xla":
-        return _ref.sym_filter_bank_apply(fwd, adj, gains, x, num_stages)
-    if backend == "pallas":
-        flat = x.reshape(-1, x.shape[-1])
-        out = _sp.sym_filter_bank_apply(fwd, adj, gains, flat,
-                                        interpret=interpret,
-                                        num_stages=num_stages)
-        return out.reshape((gains.shape[0],) + x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: y[f] = Ubar diag(gains_f) Ubar^T x for a bank of
+    F filters — gains (F, n), x (..., n) -> (F, ..., n); the analysis
+    leg runs once and the pallas path fuses the whole bank into one
+    kernel launch (DESIGN.md §8)."""
+    return _bank(fwd, adj, gains, x, backend, interpret, num_stages)
 
 
 def gen_filter_bank(fwd: StagedT, inv: StagedT, gains: jnp.ndarray,
                     x: jnp.ndarray, backend: str = "xla",
                     interpret: bool = True,
                     num_stages: int | None = None) -> jnp.ndarray:
-    """y[f] = Tbar diag(gains_f) Tbar^{-1} x — the directed bank."""
-    if backend == "xla":
-        return _ref.gen_filter_bank_apply(fwd, inv, gains, x, num_stages)
-    if backend == "pallas":
-        flat = x.reshape(-1, x.shape[-1])
-        out = _sp.gen_filter_bank_apply(fwd, inv, gains, flat,
-                                        interpret=interpret,
-                                        num_stages=num_stages)
-        return out.reshape((gains.shape[0],) + x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: the directed (T-family) filter bank."""
+    return _bank(fwd, inv, gains, x, backend, interpret, num_stages)
 
 
 def batched_sym_filter_bank(fwd: StagedG, adj: StagedG, gains: jnp.ndarray,
                             x: jnp.ndarray, backend: str = "xla",
                             interpret: bool = True,
                             num_stages: int | None = None) -> jnp.ndarray:
-    """Per-matrix banks: tables (B, S, P), gains (B, F, n), x (B, ..., n)
-    -> (B, F, ..., n); one dispatch serves every (matrix, filter) pair."""
-    if backend == "xla":
-        return _ref.batched_sym_filter_bank_apply(fwd, adj, gains, x,
-                                                  num_stages)
-    if backend == "pallas":
-        b = x.shape[0]
-        flat = x.reshape(b, -1, x.shape[-1])
-        out = _sp.batched_sym_filter_bank_apply(fwd, adj, gains, flat,
-                                                interpret=interpret,
-                                                num_stages=num_stages)
-        return out.reshape((b, gains.shape[1]) + x.shape[1:])
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: per-matrix banks — tables (B, S, P), gains
+    (B, F, n), x (B, ..., n) -> (B, F, ..., n)."""
+    return _bank(fwd, adj, gains, x, backend, interpret, num_stages)
 
 
 def batched_gen_filter_bank(fwd: StagedT, inv: StagedT, gains: jnp.ndarray,
                             x: jnp.ndarray, backend: str = "xla",
                             interpret: bool = True,
                             num_stages: int | None = None) -> jnp.ndarray:
-    """Directed per-matrix banks: gains (B, F, n), x (B, ..., n)."""
-    if backend == "xla":
-        return _ref.batched_gen_filter_bank_apply(fwd, inv, gains, x,
-                                                  num_stages)
-    if backend == "pallas":
-        b = x.shape[0]
-        flat = x.reshape(b, -1, x.shape[-1])
-        out = _sp.batched_gen_filter_bank_apply(fwd, inv, gains, flat,
-                                                interpret=interpret,
-                                                num_stages=num_stages)
-        return out.reshape((b, gains.shape[1]) + x.shape[1:])
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: directed per-matrix banks."""
+    return _bank(fwd, inv, gains, x, backend, interpret, num_stages)
 
 
 def batched_g_apply(staged: StagedG, x: jnp.ndarray,
                     backend: str = "xla", interpret: bool = True,
                     num_stages: int | None = None,
                     keep: str = "head") -> jnp.ndarray:
-    """y[b] = Ubar_b x[b]: tables (B, S, P), x (B, ..., n)."""
-    if backend == "xla":
-        return _ref.batched_g_apply(staged, x, num_stages, keep)
-    if backend == "pallas":
-        b = x.shape[0]
-        flat = x.reshape(b, -1, x.shape[-1])
-        return _bf.batched_butterfly_apply(
-            staged, flat, interpret=interpret, num_stages=num_stages,
-            keep=keep).reshape(x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: y[b] = Ubar_b x[b] — tables (B, S, P)."""
+    return _apply(staged, x, backend, interpret, num_stages, keep)
 
 
 def batched_t_apply(staged: StagedT, x: jnp.ndarray,
                     backend: str = "xla", interpret: bool = True,
                     num_stages: int | None = None,
                     keep: str = "head") -> jnp.ndarray:
-    """y[b] = Tbar_b x[b]: tables (B, S, P), x (B, ..., n)."""
-    if backend == "xla":
-        return _ref.batched_t_apply(staged, x, num_stages, keep)
-    if backend == "pallas":
-        b = x.shape[0]
-        flat = x.reshape(b, -1, x.shape[-1])
-        return _sh.batched_shear_apply(
-            staged, flat, interpret=interpret, num_stages=num_stages,
-            keep=keep).reshape(x.shape)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated shim: y[b] = Tbar_b x[b] — tables (B, S, P)."""
+    return _apply(staged, x, backend, interpret, num_stages, keep)
 
 
 def stage_g(factors: GFactors):

@@ -48,7 +48,6 @@ work), selectable per step, with per-tier counts in the serve stats.
 from __future__ import annotations
 
 import argparse
-import functools
 import pathlib
 import time
 from dataclasses import dataclass
@@ -66,59 +65,23 @@ DEFAULT_TIERS = {"full": 1.0, "balanced": 0.5, "draft": 0.25}
 
 
 # ---------------------------------------------------------------------------
-# Cached serving programs (DESIGN.md §11).  Staged tables + spectrum are
-# ARGUMENTS, not closure constants: a hot-swapped basis version with
-# unchanged table shapes reuses the compiled program, so the steady-state
-# step path never recompiles across dynamic refreshes (fig11 asserts the
-# compile count).  One cache entry per (family, batching, backend, cut,
-# width) serves every engine and every version in the process.
+# Serving programs come from the plan cache (kernels/plan.py; DESIGN.md
+# §13).  Staged tables + spectrum are ARGUMENTS, not closure constants: a
+# hot-swapped basis version with unchanged table shapes reuses the
+# compiled program, so the steady-state step path never recompiles across
+# dynamic refreshes (fig11 asserts the compile count).  One cache entry
+# per ApplyPlan serves every engine and every version in the process —
+# the plan cache is the ONE program cache (the pre-plan `_tier_program`/
+# `_bank_program` lru caches collapsed onto it).
 # ---------------------------------------------------------------------------
 
-def _tables(staged) -> tuple:
-    """Device table arrays of a StagedG/StagedT (the canonical split
-    lives in core/staging.py; deferred import keeps serve.py import-light
+def _tables(staged, precision: str = "f32") -> tuple:
+    """Device table arrays of a StagedG/StagedT at the serving precision
+    (``precision="bf16"`` casts the value tables ONCE per swap, matching
+    ``ApplyPlan.prepare``; deferred import keeps serve.py import-light
     before mesh setup)."""
-    from repro.core.staging import table_arrays
-    return table_arrays(staged)
-
-
-@functools.lru_cache(maxsize=None)
-def _tier_program(kind: str, batched: bool, backend: str,
-                  num_stages: Optional[int], n: int):
-    """Jitted fused-operator program for one serving tier."""
-    from repro.core.staging import StagedG, StagedT
-    from repro.kernels import ops as kops
-    cls = StagedG if kind == "sym" else StagedT
-    if kind == "sym":
-        op = kops.batched_sym_operator if batched else kops.sym_operator
-    else:
-        op = kops.batched_gen_operator if batched else kops.gen_operator
-
-    def program(fwd_t, bwd_t, d, x):
-        return op(cls(*fwd_t, None, n), cls(*bwd_t, None, n), d, x,
-                  backend=backend, num_stages=num_stages)
-
-    return jax.jit(program)
-
-
-@functools.lru_cache(maxsize=None)
-def _bank_program(kind: str, batched: bool, backend: str, n: int):
-    """Jitted fused filter-bank program (full tier; DESIGN.md §8)."""
-    from repro.core.staging import StagedG, StagedT
-    from repro.kernels import ops as kops
-    cls = StagedG if kind == "sym" else StagedT
-    if kind == "sym":
-        op = (kops.batched_sym_filter_bank if batched
-              else kops.sym_filter_bank)
-    else:
-        op = (kops.batched_gen_filter_bank if batched
-              else kops.gen_filter_bank)
-
-    def program(fwd_t, bwd_t, gains, x):
-        return op(cls(*fwd_t, None, n), cls(*bwd_t, None, n), gains, x,
-                  backend=backend)
-
-    return jax.jit(program)
+    from repro.core.staging import table_arrays, with_precision
+    return table_arrays(with_precision(staged, precision))
 
 
 @dataclass(frozen=True)
@@ -192,6 +155,19 @@ def parse_args(argv=None):
     ap.add_argument("--signals", type=int, default=32,
                     help="signal rows filtered per graph per step")
     ap.add_argument("--backend", choices=("xla", "pallas"), default="xla")
+    ap.add_argument("--precision", choices=("f32", "bf16"),
+                    default="f32",
+                    help="staged-table storage precision for serving: "
+                         "bf16 halves the value-table bytes per version "
+                         "while keeping f32 accumulation (the filter "
+                         "error stays within the 2*Lip(h)*delta bound; "
+                         "DESIGN.md §13)")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve through the fused single-program "
+                         "operator path (default); --no-fused runs the "
+                         "three-pass analysis->scale->synthesis staged "
+                         "baseline (parity / benchmarking)")
     ap.add_argument("--directed", action="store_true",
                     help="serve DIRECTED graph Laplacians through the "
                          "T-transform family (kind='general'); without "
@@ -320,15 +296,28 @@ class FGFTServeEngine:
                  hint: Optional[str] = None,
                  tiers: Optional[Dict[str, float]] = None,
                  sizes=None, dynamic: bool = False, policy=None,
-                 basis=None, drift_baseline=None):
+                 basis=None, drift_baseline=None,
+                 precision: str = "f32", fused: bool = True,
+                 block_b: Optional[int] = None):
         # deferred import: repro.core builds jnp constants at import time,
         # and launch modules must not touch jax state before mesh setup
         from repro.core import ApproxEigenbasis
+        from repro.core.staging import TABLE_PRECISIONS
+        if precision not in TABLE_PRECISIONS:
+            raise ValueError(f"precision must be one of "
+                             f"{TABLE_PRECISIONS}, got {precision!r}")
         self.backend = backend
         self.mesh = mesh
         self._filters = filters
         self._tier_spec = dict(tiers or {"full": 1.0})
         self._n_iter = n_iter
+        # serving precision/fusion policy (DESIGN.md §13): bf16 stores
+        # the swap's value tables in bfloat16 (the plan program upcasts
+        # the signal, so accumulation stays f32); fused=False serves the
+        # three-pass staged baseline (parity / benchmarking)
+        self._precision = precision
+        self._fused = bool(fused)
+        self._block_b = block_b
         laps = jnp.asarray(laps, jnp.float32)
         # dynamic engines quantize staged-table shapes so steady-state
         # refits land on the compiled-program caches (core/staging.py)
@@ -461,6 +450,15 @@ class FGFTServeEngine:
         single attribute store.  ``laps``: the Laplacians the tier
         spectra refit against — the fit stack at construction, the
         updated stack on a dynamic swap."""
+        from repro.kernels.plan import ApplyPlan
+
+        def _plan(mode, num_stages=None):
+            return ApplyPlan(family=basis.kind, mode=mode, n=basis.n,
+                             batched=basis.batched, backend=self.backend,
+                             num_stages=num_stages,
+                             precision=self._precision,
+                             fused=self._fused, block_b=self._block_b)
+
         full_stages = int(basis.fwd.num_stages)
         tiers: Dict[str, dict] = {}
         fns: Dict[str, Any] = {}
@@ -474,8 +472,7 @@ class FGFTServeEngine:
                 spec = prefix_spectrum(basis, laps, cut)
             tiers[name] = {"num_stages": n_stages,
                            "num_transforms": n_comp, "spectrum": spec}
-            fns[name] = _tier_program(basis.kind, basis.batched,
-                                      self.backend, cut, basis.n)
+            fns[name] = _plan("operator", cut).program()
         bank = bank_gains = bank_fn = None
         if self._filters:
             from repro.spectral import SpectralFilterBank, named_responses
@@ -483,14 +480,13 @@ class FGFTServeEngine:
             # on every swap; the serving program itself is shape-cached
             bank = SpectralFilterBank(basis, named_responses(self._filters))
             bank_gains = bank.gains()
-            bank_fn = _bank_program(basis.kind, basis.batched,
-                                    self.backend, basis.n)
+            bank_fn = _plan("bank").program()
         version = 0 if self._live is None else self._live.version + 1
-        self._live = _LiveVersion(basis=basis, fwd=_tables(basis.fwd),
-                                  bwd=_tables(basis.bwd), tiers=tiers,
-                                  fns=fns, bank=bank,
-                                  bank_gains=bank_gains, bank_fn=bank_fn,
-                                  version=version)
+        self._live = _LiveVersion(
+            basis=basis, fwd=_tables(basis.fwd, self._precision),
+            bwd=_tables(basis.bwd, self._precision), tiers=tiers,
+            fns=fns, bank=bank, bank_gains=bank_gains, bank_fn=bank_fn,
+            version=version)
         # default tier = highest quality in the map, whatever its name
         self.default_tier = max(
             tiers, key=lambda k: tiers[k]["num_transforms"])
@@ -733,7 +729,9 @@ class FGFTServeEngine:
             "serve": {"tier_spec": self._tier_spec,
                       "filters": self._filters,
                       "n_iter": self._n_iter,
-                      "num_transforms": int(self._g0)}}
+                      "num_transforms": int(self._g0),
+                      "precision": self._precision,
+                      "fused": self._fused}}
         if extra_metadata:
             overlap = {"serve", "dynamic"} & set(extra_metadata)
             if overlap:
@@ -759,8 +757,10 @@ class FGFTServeEngine:
              laps=None, backend: str = "xla", mesh=None,
              filters: Optional[str] = None,
              tiers: Optional[Dict[str, float]] = None,
-             dynamic: Optional[bool] = None, policy=None
-             ) -> "FGFTServeEngine":
+             dynamic: Optional[bool] = None, policy=None,
+             precision: Optional[str] = None,
+             fused: Optional[bool] = None,
+             block_b: Optional[int] = None) -> "FGFTServeEngine":
         """Rebuild a serving engine from a checkpoint WITHOUT refitting.
 
         Dynamic engines restore their tracked Laplacians, per-graph
@@ -804,7 +804,12 @@ class FGFTServeEngine:
                      tiers=tiers if tiers is not None
                      else serve_meta.get("tier_spec"),
                      dynamic=dynamic, policy=policy, basis=basis,
-                     drift_baseline=(dyn_meta or {}).get("baseline"))
+                     drift_baseline=(dyn_meta or {}).get("baseline"),
+                     precision=precision if precision is not None
+                     else serve_meta.get("precision", "f32"),
+                     fused=fused if fused is not None
+                     else serve_meta.get("fused", True),
+                     block_b=block_b)
         from dataclasses import replace as _replace
         engine._live = _replace(
             engine._live, version=int(basis.info.get("version", 0)))
@@ -872,6 +877,8 @@ class RaggedFGFTServeEngine:
                  hint: Optional[str] = None,
                  tiers: Optional[Dict[str, float]] = None,
                  min_width: int = 8, dynamic: bool = False, policy=None,
+                 precision: str = "f32", fused: bool = True,
+                 block_b: Optional[int] = None,
                  _engines: Optional[Dict[int, FGFTServeEngine]] = None):
         from repro.core import pad_ragged
         laps = [np.asarray(lap, np.float32) for lap in laps]
@@ -904,7 +911,8 @@ class RaggedFGFTServeEngine:
                 stack, scaled_g(w), n_iter=n_iter, backend=backend,
                 mesh=mesh, filters=filters, kind=kind, hint=hint,
                 tiers=tiers, sizes=None if np.all(sizes == w) else sizes,
-                dynamic=dynamic, policy=policy)
+                dynamic=dynamic, policy=policy, precision=precision,
+                fused=fused, block_b=block_b)
 
     def __len__(self) -> int:
         return len(self.sizes)
@@ -1055,8 +1063,10 @@ class RaggedFGFTServeEngine:
              backend: str = "xla", mesh=None,
              filters: Optional[str] = None,
              tiers: Optional[Dict[str, float]] = None,
-             dynamic: Optional[bool] = None, policy=None
-             ) -> "RaggedFGFTServeEngine":
+             dynamic: Optional[bool] = None, policy=None,
+             precision: Optional[str] = None,
+             fused: Optional[bool] = None,
+             block_b: Optional[int] = None) -> "RaggedFGFTServeEngine":
         import json
         directory = pathlib.Path(directory)
         manifest = json.loads((directory / "router.json").read_text())
@@ -1067,7 +1077,8 @@ class RaggedFGFTServeEngine:
             engines[w] = FGFTServeEngine.load(
                 directory / f"bucket_{w:05d}", step, backend=backend,
                 mesh=mesh, filters=filters, tiers=tiers, dynamic=dynamic,
-                policy=policy)
+                policy=policy, precision=precision, fused=fused,
+                block_b=block_b)
         # rebuild request-order geometry from the restored laps (pads are
         # zero, so per-graph denominators crop for free)
         laps = []
@@ -1119,7 +1130,8 @@ def serve_fgft(args) -> dict:
     t0 = time.time()
     engine = FGFTServeEngine(jnp.asarray(laps), g, backend=args.backend,
                              mesh=mesh, filters=args.filter, kind=kind,
-                             tiers=args.tier_map)
+                             tiers=args.tier_map,
+                             precision=args.precision, fused=args.fused)
     fit_s = time.time() - t0
     denom = (laps * laps).sum((1, 2))
     rel = np.asarray(engine.basis.objective) / np.maximum(denom, 1e-30)
@@ -1203,7 +1215,8 @@ def serve_fgft_ragged(args) -> dict:
     t0 = time.time()
     router = RaggedFGFTServeEngine(
         laps, args.transforms, backend=args.backend, mesh=mesh, kind=kind,
-        filters=args.filter, tiers=args.tier_map)
+        filters=args.filter, tiers=args.tier_map,
+        precision=args.precision, fused=args.fused)
     fit_s = time.time() - t0
     rel = router.rel_errors()
     print(f"[fgft] fitted {len(laps)} graphs (sizes {sorted(set(sizes))}) "
@@ -1277,14 +1290,16 @@ def serve_fgft_dynamic(args) -> dict:
         engine = RaggedFGFTServeEngine(
             laps, args.transforms, backend=args.backend, mesh=mesh,
             kind=kind, filters=args.filter, tiers=args.tier_map,
-            dynamic=True, policy=args.policy)
+            dynamic=True, policy=args.policy,
+            precision=args.precision, fused=args.fused)
     else:
         g = args.transforms or int(2 * args.graph_n
                                    * np.log2(args.graph_n))
         engine = FGFTServeEngine(
             jnp.asarray(np.stack(laps)), g, backend=args.backend,
             mesh=mesh, kind=kind, filters=args.filter,
-            tiers=args.tier_map, dynamic=True, policy=args.policy)
+            tiers=args.tier_map, dynamic=True, policy=args.policy,
+            precision=args.precision, fused=args.fused)
     fit_s = time.time() - t0
     print(f"[fgft] fitted evolving fleet of {b} graphs in {fit_s:.1f}s; "
           f"streaming {args.update_rounds} rounds at churn {args.churn}")

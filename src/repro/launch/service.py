@@ -799,7 +799,9 @@ def serve_fgft_async(args) -> dict:
         engine = RaggedFGFTServeEngine(
             laps, args.transforms, backend=args.backend, mesh=mesh,
             kind=kind, filters=args.filter, tiers=args.tier_map,
-            dynamic=args.dynamic, policy=args.policy)
+            dynamic=args.dynamic, policy=args.policy,
+            precision=getattr(args, "precision", "f32"),
+            fused=getattr(args, "fused", True))
     else:
         g = args.transforms or int(2 * args.graph_n
                                    * np.log2(args.graph_n))
@@ -807,7 +809,9 @@ def serve_fgft_async(args) -> dict:
             jnp.asarray(np.stack(laps)), g, backend=args.backend,
             mesh=mesh, kind=kind, filters=args.filter,
             tiers=args.tier_map, dynamic=args.dynamic,
-            policy=args.policy)
+            policy=args.policy,
+            precision=getattr(args, "precision", "f32"),
+            fused=getattr(args, "fused", True))
     print(f"[svc] fitted fleet of {b} graphs in {time.time() - t0:.1f}s")
 
     rng = np.random.default_rng(args.seed)
