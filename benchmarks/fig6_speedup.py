@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import (approximate_symmetric, approximate_general,
                         g_to_dense, t_to_dense, pack_g, pack_t)
-from repro.kernels import ops
+from repro.kernels.plan import ApplyPlan
 from .common import emit, time_call
 
 
@@ -33,9 +33,9 @@ def run(fast: bool = False):
             (batch, n)).astype(np.float32))
 
         dense_fn = jax.jit(lambda m, v: v @ m.T)
-        fast_fn = jax.jit(lambda st, v: ops.g_apply(st, v, backend="xla"))
+        plan_g = ApplyPlan.for_staged(staged_g, mode="apply")
         t_dense = time_call(dense_fn, u, xb)
-        t_fast = time_call(fast_fn, staged_g, xb)
+        t_fast = time_call(plan_g.program(), plan_g.prepare(staged_g), xb)
         flops_dense = 2 * n * n
         flops_fast = 6 * g
         rows.append([n, "G", g, staged_g.num_stages,
@@ -47,9 +47,9 @@ def run(fast: bool = False):
         tmat = t_to_dense(ft, n)
         kinds = np.asarray(ft.kind)
         flops_t = int((kinds == 0).sum() + 2 * (kinds == 1).sum())
-        fast_t_fn = jax.jit(lambda st, v: ops.t_apply(st, v, backend="xla"))
+        plan_t = ApplyPlan.for_staged(staged_t, mode="apply")
         t_dense2 = time_call(dense_fn, tmat, xb)
-        t_fast2 = time_call(fast_t_fn, staged_t, xb)
+        t_fast2 = time_call(plan_t.program(), plan_t.prepare(staged_t), xb)
         rows.append([n, "T", g, staged_t.num_stages,
                      flops_dense / max(flops_t, 1), t_dense2 / t_fast2])
     emit("fig6_speedup",

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.core import ApproxEigenbasis
 from repro.core.fgft import laplacian
 from repro.graphs import community_graph, sensor_graph
-from repro.kernels import ops
+from repro.kernels.plan import ApplyPlan
 from repro.spectral import (SpectralFilterBank, chebyshev_coefficients,
                             chebyshev_apply, matched_degree,
                             named_responses, response_lipschitz)
@@ -44,17 +44,21 @@ BANK = "heat,heat:10.0,tikhonov,lowpass,highpass,bandpass"
 
 def _fused_vs_three_pass(basis, gains, x, backend):
     """Median time of the fused bank vs the three-pass composition."""
-    fused = jax.jit(lambda s: ops.batched_sym_filter_bank(
-        basis.fwd, basis.bwd, gains, s, backend=backend))
+    bank_plan = ApplyPlan.for_staged(basis.fwd, mode="bank",
+                                     backend=backend)
+    fwd_t = bank_plan.prepare(basis.fwd)
+    bwd_t = bank_plan.prepare(basis.bwd)
+    bank_prog = bank_plan.program()
+    fused = lambda s: bank_prog(fwd_t, bwd_t, gains, s)       # noqa: E731
 
     # the unfused baseline: analysis, scale, and synthesis each cross the
     # dispatch boundary on the SAME backend, and every filter re-runs the
     # analysis transform
-    analysis = jax.jit(lambda s: ops.batched_g_apply(basis.bwd, s,
-                                                     backend=backend))
+    apply_prog = ApplyPlan.for_staged(basis.fwd, mode="apply",
+                                      backend=backend).program()
+    analysis = lambda s: apply_prog(bwd_t, s)                 # noqa: E731
     scale = jax.jit(lambda c, d: c * d[:, None, :])
-    synthesis = jax.jit(lambda c: ops.batched_g_apply(basis.fwd, c,
-                                                      backend=backend))
+    synthesis = lambda c: apply_prog(fwd_t, c)                # noqa: E731
 
     def three_pass(s):
         outs = []

@@ -18,14 +18,13 @@ so one fit serves every quality tier.  This benchmark records:
     within 10% (it reuses the fitted prefix instead of refactorizing).
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import ApproxEigenbasis, build_fgft, laplacian
 from repro.core.fgft import prefix_relative_error, relative_error
 from repro.core.staging import select_cut
 from repro.graphs import community_graph
-from repro.kernels import ops
+from repro.kernels.plan import ApplyPlan
 from .common import emit, time_call
 from .run import gate_assert
 
@@ -46,16 +45,18 @@ def _tier_speedup(fwd, adj, diag, backend, num_stages, r_grid, n,
     """Max over an R grid of t(full) / t(half-prefix) for the fused
     operator (the max kills CI timing flakes — fig7/fig8 convention)."""
     best = 0.0
+    full_p = ApplyPlan.for_staged(fwd, mode="operator", backend=backend)
+    half_p = ApplyPlan.for_staged(fwd, mode="operator", backend=backend,
+                                  num_stages=num_stages)
+    fwd_t, adj_t = full_p.prepare(fwd), full_p.prepare(adj)
+    full_prog, half_prog = full_p.program(), half_p.program()
     for r in r_grid:
         x = jnp.asarray(np.random.default_rng(r).standard_normal(
             (r, n)).astype(np.float32))
-        full = jax.jit(lambda x: ops.sym_operator(fwd, adj, diag, x,
-                                                  backend=backend))
-        half = jax.jit(lambda x: ops.sym_operator(fwd, adj, diag, x,
-                                                  backend=backend,
-                                                  num_stages=num_stages))
-        t_full = time_call(full, x, repeats=repeats, warmup=2)
-        t_half = time_call(half, x, repeats=repeats, warmup=2)
+        t_full = time_call(lambda v: full_prog(fwd_t, adj_t, diag, v), x,
+                           repeats=repeats, warmup=2)
+        t_half = time_call(lambda v: half_prog(fwd_t, adj_t, diag, v), x,
+                           repeats=repeats, warmup=2)
         best = max(best, t_full / t_half)
     return best
 

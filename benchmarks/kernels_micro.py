@@ -4,11 +4,10 @@ stage tables; batch-tiled).  Pallas kernels run in interpret mode here, so
 wall-times are for the XLA path only; the Pallas numbers on real TPU come
 from the same staged tables."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import approximate_symmetric, pack_g
-from repro.kernels import ops
+from repro.kernels.plan import ApplyPlan
 from .common import emit, time_call
 
 
@@ -25,8 +24,8 @@ def run(fast: bool = False):
             staged = pack_g(f)
             xb = jnp.asarray(np.random.default_rng(1).standard_normal(
                 (batch, n)).astype(np.float32))
-            fn = jax.jit(lambda st, v: ops.g_apply(st, v, backend="xla"))
-            t = time_call(fn, staged, xb)
+            plan = ApplyPlan.for_staged(staged, mode="apply")
+            t = time_call(plan.program(), plan.prepare(staged), xb)
             rows.append([n, batch, alpha, g, staged.num_stages,
                          t * 1e6, 6 * g * batch / max(t, 1e-12) / 1e9])
     emit("kernels_micro (staged G apply, XLA path)",

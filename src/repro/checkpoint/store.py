@@ -37,8 +37,18 @@ def _tree_paths(tree) -> list:
 
 
 def save_checkpoint(directory, step: int, state, *, metadata: Optional[dict]
-                    = None) -> pathlib.Path:
-    """Synchronous sharded save with atomic commit marker."""
+                    = None, shards: int = 1) -> pathlib.Path:
+    """Synchronous sharded save with atomic commit marker.
+
+    ``shards``: number of per-shard table files to split the batch
+    (leading) axis over — a mesh-placed engine passes its device count so
+    each ``leaves_{s:03d}.npz`` holds one device's rows (DESIGN.md §14).
+    Leaves whose leading dim is smaller than ``shards`` (and 0-d leaves)
+    land whole in shard 0.  The manifest records the per-leaf shard count,
+    so restore works regardless of the reader's mesh shape — the arrays
+    reassemble to full size and re-place under the CURRENT shardings."""
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     tmp = directory / f"step_{step:09d}.tmp"
@@ -49,17 +59,28 @@ def save_checkpoint(directory, step: int, state, *, metadata: Optional[dict]
     tmp.mkdir()
 
     named = _tree_paths(state)
-    arrays = {}
+    per_file: list = [dict() for _ in range(shards)]
     manifest = {"step": step, "leaves": [], "metadata": metadata or {},
                 "time": time.time()}
+    if shards > 1:
+        manifest["num_shards"] = shards
     for i, (path, leaf) in enumerate(named):
         arr = np.asarray(jax.device_get(leaf))
         key = f"leaf_{i:05d}"
-        arrays[key] = arr
-        manifest["leaves"].append(
-            {"path": path, "key": key, "shape": list(arr.shape),
-             "dtype": str(arr.dtype)})
-    np.savez(tmp / "leaves_000.npz", **arrays)
+        k = shards if (shards > 1 and arr.ndim >= 1
+                       and arr.shape[0] >= shards) else 1
+        entry = {"path": path, "key": key, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)}
+        if k > 1:
+            entry["shards"] = k
+            for s, part in enumerate(np.array_split(arr, k, axis=0)):
+                per_file[s][key] = part
+        else:
+            per_file[0][key] = arr
+        manifest["leaves"].append(entry)
+    n_files = max([1] + [e.get("shards", 1) for e in manifest["leaves"]])
+    for s in range(n_files):
+        np.savez(tmp / f"leaves_{s:03d}.npz", **per_file[s])
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -112,7 +133,20 @@ def restore_checkpoint(directory, state_like, *, step: Optional[int] = None,
             raise FileNotFoundError(f"no committed checkpoint in {directory}")
     final = directory / f"step_{step:09d}"
     manifest = json.loads((final / "manifest.json").read_text())
-    data = np.load(final / "leaves_000.npz")
+    # shard-aware read: a placed engine writes one table file per device
+    # (manifest["num_shards"]); split leaves reassemble along axis 0, so
+    # any reader mesh — including a single device — gets full arrays
+    num_files = int(manifest.get("num_shards", 1))
+    files = {0: np.load(final / "leaves_000.npz")}
+    for s in range(1, num_files):
+        files[s] = np.load(final / f"leaves_{s:03d}.npz")
+
+    def _leaf_array(entry):
+        k = int(entry.get("shards", 1))
+        if k == 1:
+            return files[0][entry["key"]]
+        return np.concatenate([files[s][entry["key"]] for s in range(k)],
+                              axis=0)
 
     by_path = {e["path"]: e for e in manifest["leaves"]}
     named = _tree_paths(state_like)
@@ -123,7 +157,7 @@ def restore_checkpoint(directory, state_like, *, step: Optional[int] = None,
         entry = by_path.get(path)
         if entry is None:
             raise KeyError(f"checkpoint missing leaf {path}")
-        arr = data[entry["key"]]
+        arr = _leaf_array(entry)
         want_dtype = getattr(like, "dtype", arr.dtype)
         arr = arr.astype(want_dtype)
         if sh is not None:

@@ -579,14 +579,17 @@ class ApproxEigenbasis:
 
     def save(self, directory, step: int = 0, *,
              extra_state: Optional[Dict[str, Any]] = None,
-             extra_metadata: Optional[Dict[str, Any]] = None):
+             extra_metadata: Optional[Dict[str, Any]] = None,
+             shards: int = 1):
         """Persist factors + spectrum via the atomic checkpoint store.
 
         ``extra_state``: additional leaves saved alongside (``load``
         ignores them; callers restore them with their own ``state_like``
         — the dynamic serve engines persist their tracked Laplacians this
         way).  ``extra_metadata``: JSON-able keys merged into the
-        manifest metadata next to the ``eigenbasis`` block."""
+        manifest metadata next to the ``eigenbasis`` block.  ``shards``:
+        per-shard table files (mesh-placed engines pass their device
+        count; ``load`` reassembles on any mesh — DESIGN.md §14)."""
         from repro.checkpoint import save_checkpoint
         state = {"factors": self.factors, "spectrum": self.spectrum}
         for key, leaf in (extra_state or {}).items():
@@ -635,7 +638,8 @@ class ApproxEigenbasis:
                               if self.info.get("stage_pad") else None),
             }
         })
-        return save_checkpoint(directory, step, state, metadata=meta)
+        return save_checkpoint(directory, step, state, metadata=meta,
+                               shards=shards)
 
     @classmethod
     def load(cls, directory, step: Optional[int] = None

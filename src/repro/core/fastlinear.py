@@ -165,8 +165,10 @@ def compressed_linear_apply(comp: CompressedLinear, x: jnp.ndarray,
                             backend: str = "xla") -> jnp.ndarray:
     """y ~= W x through the compressed factors: the fused symmetric
     operator (H) followed by the staged Q apply.  ``x``: (..., n);
-    ``backend`` as in kernels/ops.py (DESIGN.md §4)."""
-    from repro.kernels import ops as kops
-    y = kops.sym_operator(comp.h_fwd, comp.h_adj, comp.diag, x,
-                          backend=backend)
-    return kops.g_apply(comp.q_fwd, y, backend=backend)
+    ``backend`` as in kernels/plan.py (DESIGN.md §4)."""
+    from repro.kernels.plan import ApplyPlan
+    y = ApplyPlan.for_staged(comp.h_fwd, mode="operator",
+                             backend=backend).operator(
+        comp.h_fwd, comp.h_adj, comp.diag, x)
+    return ApplyPlan.for_staged(comp.q_fwd, mode="apply",
+                                backend=backend).apply(comp.q_fwd, y)

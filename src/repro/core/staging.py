@@ -147,6 +147,43 @@ def with_precision(staged, precision: str):
                               for f in values})
 
 
+_G_PAD_VALUES = (None, None, 1.0, 0.0, 1.0)   # idx fields use n
+_T_PAD_VALUES = (None, None, 1.0, 0.0)
+
+
+def pad_batch(staged, quantum: int):
+    """Pad the leading batch axis of (B, S, P) tables up to a multiple of
+    ``quantum`` with whole no-op rows (per-device batch quanta,
+    DESIGN.md §14).
+
+    A mesh placement splits the batch axis over a bucket's devices, which
+    needs B divisible by the device count; rather than reshard, the batch
+    pads with rows whose every entry is the structural no-op (out-of-bounds
+    index ``n`` + identity values) — a pad row applies as the identity on
+    its signal row, so padded tables on padded signals equal the original
+    tables on the original signals (rows past B are untouched/zero).  The
+    ``cuts`` ladder and ``n`` are batch-independent and survive unchanged.
+    """
+    if quantum < 1:
+        raise ValueError(f"pad_batch: quantum must be >= 1, got {quantum}")
+    tables = table_arrays(staged)
+    if tables[0].ndim != 3:
+        raise ValueError("pad_batch expects batched (B, S, P) tables, got "
+                         f"ndim={tables[0].ndim}")
+    b = tables[0].shape[0]
+    b_pad = -(-b // quantum) * quantum
+    if b_pad == b:
+        return staged
+    pads = (_G_PAD_VALUES if isinstance(staged, StagedG) else _T_PAD_VALUES)
+    upd = {}
+    for field, pad_val in zip(_table_fields(staged), pads):
+        arr = getattr(staged, field)
+        fill = staged.n if pad_val is None else pad_val
+        pad_block = jnp.full((b_pad - b,) + arr.shape[1:], fill, arr.dtype)
+        upd[field] = jnp.concatenate([arr, pad_block], axis=0)
+    return staged._replace(**upd)
+
+
 # ---------------------------------------------------------------------------
 # Prefix metadata helpers
 # ---------------------------------------------------------------------------

@@ -41,7 +41,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.staging import StagedG
 
 
 class Action(enum.Enum):
@@ -184,20 +183,7 @@ def _lemma1_program(batched: bool, n: int):
     """Cached jitted full-chain Lemma-1 refresh: new spectrum =
     ``diag(Ubar^T L' Ubar)`` per graph, via n staged applies (no dense
     eigendecomposition, no greedy work)."""
-    from repro.kernels import ops as kops
-    apply = kops.batched_g_apply if batched else kops.g_apply
-
-    def program(fwd_t, laps):
-        staged = StagedG(*fwd_t, None, n)
-        eye = jnp.eye(n, dtype=jnp.float32)
-        if batched:
-            eye = jnp.broadcast_to(eye, (laps.shape[0], n, n))
-        # staged apply acts on row vectors: rows of apply(eye) are the
-        # basis columns, i.e. apply(eye) == Ubar^T (core/eigenbasis.py)
-        ut = apply(staged, eye, keep="tail")
-        return jnp.einsum("...ij,...jk,...ik->...i", ut, laps, ut)
-
-    return jax.jit(program)
+    return _prefix_spectrum_program(batched, n, None)
 
 
 @functools.lru_cache(maxsize=None)
@@ -205,16 +191,19 @@ def _prefix_spectrum_program(batched: bool, n: int,
                              num_stages: Optional[int]):
     """Cached jitted per-tier Lemma-1 refresh on the ``num_stages``
     prefix basis (DESIGN.md §9 tiers keep their own refit spectrum
-    across hot swaps)."""
-    from repro.kernels import ops as kops
-    apply = kops.batched_g_apply if batched else kops.g_apply
+    across hot swaps; ``None`` = full chain)."""
+    from repro.kernels.plan import ApplyPlan
+    table_op = ApplyPlan(family="sym", mode="apply", n=n,
+                         batched=batched, keep="tail",
+                         num_stages=num_stages).table_op()
 
     def program(fwd_t, laps):
-        staged = StagedG(*fwd_t, None, n)
         eye = jnp.eye(n, dtype=jnp.float32)
         if batched:
             eye = jnp.broadcast_to(eye, (laps.shape[0], n, n))
-        ut = apply(staged, eye, num_stages=num_stages, keep="tail")
+        # staged apply acts on row vectors: rows of apply(eye) are the
+        # basis columns, i.e. apply(eye) == Ubar^T (core/eigenbasis.py)
+        ut = table_op(fwd_t, eye)
         return jnp.einsum("...ij,...jk,...ik->...i", ut, laps, ut)
 
     return jax.jit(program)

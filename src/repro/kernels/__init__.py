@@ -2,7 +2,8 @@
 
 Dispatch is declarative: ``plan.ApplyPlan`` names a staged-table
 computation and compiles it to one cached program (DESIGN.md §13);
-``ops`` keeps the pre-plan wrapper names as deprecated shims, and
-``autotune`` persists the Pallas tile choices the plans resolve."""
-from . import autotune, ops, plan, ref, butterfly, shear, spectral
+``autotune`` persists the Pallas tile choices the plans resolve.  The
+pre-plan ``ops`` wrapper shims are gone — construct plans directly.
+"""
+from . import autotune, plan, ref, butterfly, shear, spectral
 from .plan import ApplyPlan

@@ -5,11 +5,11 @@ T), mode (plain transform apply / fused ``Ubar diag(d) Ubar^T`` operator
 / spectral filter bank), batching, anytime ladder cut, backend, tile
 size and storage-precision policy — and ``program()`` compiles it to
 exactly ONE cached jitted program.  Everything serving-shaped in the
-repo routes through this module: the ``kernels/ops.py`` compatibility
-shims, the serve engines' tier/bank programs (launch/serve.py), the
-drift scorer's operator leg (dynamic/drift.py) and the core apply paths
-(core/fgft.py, core/eigenbasis.py) all construct plans instead of
-hand-wiring kernel dispatch, so the "same-shape swaps recompile
+repo routes through this module: the serve engines' tier/bank programs
+(launch/serve.py), the drift scorer's operator leg (dynamic/drift.py)
+and the core apply paths (core/fgft.py, core/eigenbasis.py) all
+construct plans instead of hand-wiring kernel dispatch, so the
+"same-shape swaps recompile
 nothing" invariant (DESIGN.md §11) holds by construction: programs take
 the staged tables as ARGUMENTS and are cached on the plan alone.
 
@@ -52,7 +52,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.staging import (StagedG, StagedT, TABLE_PRECISIONS,
-                                table_arrays, with_precision)
+                                pad_batch, table_arrays, with_precision)
+from repro.runtime.sharding import BucketPlacement
 from . import butterfly as _bf
 from . import ref as _ref
 from . import shear as _sh
@@ -100,6 +101,13 @@ class ApplyPlan:
     fused: bool = True
     block_b: Optional[int] = None
     interpret: bool = True
+    #: optional mesh placement (runtime/sharding.py::BucketPlacement):
+    #: ``prepare`` pads the batch axis to the per-device quantum and pins
+    #: the tables onto the bucket's devices as sharded jit arguments.
+    #: Frozen + hashable, so placed plans are ordinary cache keys — a hot
+    #: swap that keeps shapes AND placement recompiles nothing (the jit
+    #: argument layout is unchanged).
+    placement: Optional[BucketPlacement] = None
 
     def __post_init__(self):
         if self.family not in PLAN_FAMILIES:
@@ -122,6 +130,10 @@ class ApplyPlan:
         if self.block_b is not None and self.block_b <= 0:
             raise ValueError(f"block_b must be positive, "
                              f"got {self.block_b}")
+        if self.placement is not None and not self.batched:
+            raise ValueError("placement requires batched=True (the batch "
+                             "axis is what partitions over the bucket's "
+                             "devices)")
         if self.mode != "apply" and self.keep != "head":
             # operator/bank legs derive their own orientation; canonical
             # keep="head" keeps equivalent plans on one cache entry
@@ -144,8 +156,35 @@ class ApplyPlan:
     def prepare(self, staged) -> tuple:
         """Device table tuple of ``staged`` under the plan's precision
         policy — what the compiled program takes as its table arguments
-        (prepare once per basis version, off the hot path)."""
-        return table_arrays(with_precision(staged, self.precision))
+        (prepare once per basis version, off the hot path).
+
+        With a ``placement``, the batch axis first pads to the per-device
+        quantum with structural no-op rows (staging.pad_batch) and every
+        leaf is device_put onto the bucket's sub-mesh, batch-split — the
+        compiled program then runs collective-free, each device owning
+        its graphs end-to-end."""
+        staged = with_precision(staged, self.precision)
+        if self.placement is not None:
+            staged = pad_batch(staged, self.placement.batch_padded)
+            return tuple(self.placement.place_leaf(a)
+                         for a in table_arrays(staged))
+        return table_arrays(staged)
+
+    def place(self, arr):
+        """Pad (zeros) + device_put a per-graph operand (diag spectrum,
+        bank gains, signal batch) to match placed tables; identity when
+        the plan carries no placement."""
+        if self.placement is None:
+            return arr
+        return self.placement.place(arr)
+
+    def crop(self, y):
+        """Undo the batch padding on a program output (identity when
+        unplaced or the batch already divides the device count)."""
+        if self.placement is None or self.placement.batch_padded == \
+                self.placement.batch:
+            return y
+        return y[:self.placement.batch]
 
     # -- compilation -------------------------------------------------------
 
@@ -177,17 +216,20 @@ class ApplyPlan:
     # -- one-shot conveniences (prepare + program + call) ------------------
 
     def apply(self, staged, x: jnp.ndarray) -> jnp.ndarray:
-        return self.program()(self.prepare(staged), x)
+        return self.crop(self.program()(self.prepare(staged),
+                                        self.place(x)))
 
     def operator(self, fwd, bwd, diag: jnp.ndarray,
                  x: jnp.ndarray) -> jnp.ndarray:
-        return self.program()(self.prepare(fwd), self.prepare(bwd),
-                              diag, x)
+        return self.crop(self.program()(self.prepare(fwd),
+                                        self.prepare(bwd),
+                                        self.place(diag), self.place(x)))
 
     def bank(self, fwd, bwd, gains: jnp.ndarray,
              x: jnp.ndarray) -> jnp.ndarray:
-        return self.program()(self.prepare(fwd), self.prepare(bwd),
-                              gains, x)
+        return self.crop(self.program()(self.prepare(fwd),
+                                        self.prepare(bwd),
+                                        self.place(gains), self.place(x)))
 
     # -- dispatch ----------------------------------------------------------
 
@@ -205,7 +247,7 @@ class ApplyPlan:
     def _dispatch(self):
         """tables -> arrays map implementing the plan (the ONE place the
         kernel entry points, reshape conventions and cut orientations
-        are wired; kernels/ops.py shims and every engine inherit it)."""
+        are wired; every engine and apply path inherits it)."""
         cut, keep, n = self.num_stages, self.keep, self.n
         if self.mode == "apply":
             if self.backend == "xla":

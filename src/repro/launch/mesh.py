@@ -21,5 +21,9 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(model_axis: int = 1):
     """Mesh over whatever devices exist (CPU smoke / single host)."""
     n = len(jax.devices())
-    assert n % model_axis == 0
+    if model_axis <= 0 or n % model_axis != 0:
+        raise ValueError(
+            f"make_local_mesh: {n} visible device(s) cannot be factored "
+            f"into a model axis of {model_axis} (need model_axis >= 1 and "
+            f"{n} % model_axis == 0)")
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

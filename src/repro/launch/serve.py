@@ -298,7 +298,7 @@ class FGFTServeEngine:
                  sizes=None, dynamic: bool = False, policy=None,
                  basis=None, drift_baseline=None,
                  precision: str = "f32", fused: bool = True,
-                 block_b: Optional[int] = None):
+                 block_b: Optional[int] = None, placement=None):
         # deferred import: repro.core builds jnp constants at import time,
         # and launch modules must not touch jax state before mesh setup
         from repro.core import ApproxEigenbasis
@@ -307,6 +307,26 @@ class FGFTServeEngine:
             raise ValueError(f"precision must be one of "
                              f"{TABLE_PRECISIONS}, got {precision!r}")
         self.backend = backend
+        # mesh placement (DESIGN.md §14): a BucketPlacement pins this
+        # engine's graphs onto its OWN device subset — serving tables,
+        # tier spectra and signals partition along the batch axis over the
+        # bucket sub-mesh, so the steady-state step HLO is collective-free
+        # AND maintenance (drift scoring, refits) runs on the bucket's
+        # devices only, never stalling other buckets' hot paths.
+        self.placement = placement
+        if placement is not None:
+            if np.asarray(laps).ndim != 3:
+                raise ValueError("placement requires a batched (B, n, n) "
+                                 "Laplacian stack")
+            nb = np.asarray(laps).shape[0]
+            if placement.batch != nb:
+                raise ValueError(f"placement.batch={placement.batch} != "
+                                 f"fleet batch {nb}")
+            # placement OVERRIDES mesh: fits/refits shard over the
+            # bucket's own sub-mesh — the structural half of
+            # device-overlapped maintenance (a whole-mesh refit would
+            # stall every other bucket's hot path)
+            mesh = placement.mesh()
         self.mesh = mesh
         self._filters = filters
         self._tier_spec = dict(tiers or {"full": 1.0})
@@ -339,6 +359,10 @@ class FGFTServeEngine:
         else:
             self._pad_valid = jnp.asarray(
                 np.arange(basis.n) < np.asarray(basis.sizes)[..., None])
+            if self.placement is not None and self._pad_valid.ndim == 2:
+                # pad rows get all-False gains masks (their signals are
+                # zero anyway; the mask just keeps the invariant obvious)
+                self._pad_valid = self.placement.place(self._pad_valid)
         self.stats: Dict[str, Any] = {"steps": {}}
         self.dynamic = bool(dynamic)
         self._live = None
@@ -457,7 +481,17 @@ class FGFTServeEngine:
                              batched=basis.batched, backend=self.backend,
                              num_stages=num_stages,
                              precision=self._precision,
-                             fused=self._fused, block_b=self._block_b)
+                             fused=self._fused, block_b=self._block_b,
+                             placement=self.placement)
+
+        def _place(arr):
+            # per-graph operands (tier spectra, bank gains) pad with zero
+            # rows to the per-device batch quantum and pin onto the
+            # bucket's devices, matching the placed tables; identity when
+            # the engine is unplaced
+            if self.placement is None or arr is None:
+                return arr
+            return self.placement.place(arr)
 
         full_stages = int(basis.fwd.num_stages)
         tiers: Dict[str, dict] = {}
@@ -471,7 +505,8 @@ class FGFTServeEngine:
                 from repro.dynamic.refit import prefix_spectrum
                 spec = prefix_spectrum(basis, laps, cut)
             tiers[name] = {"num_stages": n_stages,
-                           "num_transforms": n_comp, "spectrum": spec}
+                           "num_transforms": n_comp,
+                           "spectrum": _place(spec)}
             fns[name] = _plan("operator", cut).program()
         bank = bank_gains = bank_fn = None
         if self._filters:
@@ -479,12 +514,20 @@ class FGFTServeEngine:
             # gains are recomputed from the (possibly refreshed) spectrum
             # on every swap; the serving program itself is shape-cached
             bank = SpectralFilterBank(basis, named_responses(self._filters))
-            bank_gains = bank.gains()
+            bank_gains = _place(bank.gains())
             bank_fn = _plan("bank").program()
         version = 0 if self._live is None else self._live.version + 1
+        # placed engines build their table arguments through the plan's
+        # prepare (batch-padded + NamedSharding-pinned); unplaced engines
+        # keep the plain host->device tables
+        if self.placement is not None:
+            prep = _plan("operator")
+            fwd_t, bwd_t = prep.prepare(basis.fwd), prep.prepare(basis.bwd)
+        else:
+            fwd_t = _tables(basis.fwd, self._precision)
+            bwd_t = _tables(basis.bwd, self._precision)
         self._live = _LiveVersion(
-            basis=basis, fwd=_tables(basis.fwd, self._precision),
-            bwd=_tables(basis.bwd, self._precision), tiers=tiers,
+            basis=basis, fwd=fwd_t, bwd=bwd_t, tiers=tiers,
             fns=fns, bank=bank, bank_gains=bank_gains, bank_fn=bank_fn,
             version=version)
         # default tier = highest quality in the map, whatever its name
@@ -526,6 +569,13 @@ class FGFTServeEngine:
             # gains would leak pad columns of x into the output
             d = jnp.where(self._pad_valid, d, 0.0)
         self.stats["steps"][tier] += 1
+        if self.placement is not None:
+            # callers hand true-B blocks; pad rows are zero signals on
+            # identity pad tables, so the padded rows compute zeros that
+            # the crop discards — per-device work, no collectives
+            y = live.fns[tier](live.fwd, live.bwd, d,
+                               self.placement.place(signals))
+            return y[:self.placement.batch]
         return live.fns[tier](live.fwd, live.bwd, d, signals)
 
     def step(self, signals: jnp.ndarray, h=None,
@@ -556,6 +606,10 @@ class FGFTServeEngine:
         live = self._live
         if live.bank is None:
             raise ValueError("engine was built without --filter responses")
+        if self.placement is not None:
+            y = live.bank_fn(live.fwd, live.bwd, live.bank_gains,
+                             self.placement.place(signals))
+            return y[:self.placement.batch], live.version
         return (live.bank_fn(live.fwd, live.bwd, live.bank_gains, signals),
                 live.version)
 
@@ -713,18 +767,25 @@ class FGFTServeEngine:
 
     # -- persistence (checkpoint/store.py; DESIGN.md §6/§11) ---------------
 
-    def save(self, directory, step: int = 0, extra_metadata=None):
+    def save(self, directory, step: int = 0, extra_metadata=None,
+             shards: Optional[int] = None):
         """Persist the live basis + serving state through the atomic
         checkpoint store: the tracked Laplacians ride as an extra state
         leaf, per-graph versions and drift/refit counters as metadata,
         and the engine swap counter as the basis version.
         ``extra_metadata`` merges additional top-level metadata keys (the
-        async service persists its SLO counters this way)."""
+        async service persists its SLO counters this way).  ``shards``
+        controls the checkpoint's table-file split (checkpoint/store.py);
+        a placed engine defaults to one shard per owning device so each
+        file holds one device's rows."""
         from dataclasses import replace as _replace
         live = self._live
         basis = _replace(live.basis,
                          info={**live.basis.info,
                                "version": int(live.version)})
+        if shards is None:
+            shards = (self.placement.num_devices
+                      if self.placement is not None else 1)
         extra_meta: Dict[str, Any] = {
             "serve": {"tier_spec": self._tier_spec,
                       "filters": self._filters,
@@ -732,6 +793,10 @@ class FGFTServeEngine:
                       "num_transforms": int(self._g0),
                       "precision": self._precision,
                       "fused": self._fused}}
+        if self.placement is not None:
+            extra_meta["serve"]["placement"] = {
+                "device_ids": list(self.placement.device_ids),
+                "batch": int(self.placement.batch)}
         if extra_metadata:
             overlap = {"serve", "dynamic"} & set(extra_metadata)
             if overlap:
@@ -750,7 +815,7 @@ class FGFTServeEngine:
                 "dirty": self._dirty.tolist(),
             }
         return basis.save(directory, step, extra_state=extra_state,
-                          extra_metadata=extra_meta)
+                          extra_metadata=extra_meta, shards=shards)
 
     @classmethod
     def load(cls, directory, step: Optional[int] = None, *,
@@ -760,8 +825,15 @@ class FGFTServeEngine:
              dynamic: Optional[bool] = None, policy=None,
              precision: Optional[str] = None,
              fused: Optional[bool] = None,
-             block_b: Optional[int] = None) -> "FGFTServeEngine":
+             block_b: Optional[int] = None,
+             placement=None) -> "FGFTServeEngine":
         """Rebuild a serving engine from a checkpoint WITHOUT refitting.
+
+        ``placement`` pins the restored engine onto a BucketPlacement.
+        The checkpoint holds full (reassembled) arrays whatever shard
+        count wrote it, so loading a 4-device checkpoint onto a 1- or
+        8-device placement just re-places — it never crashes on a mesh
+        shape mismatch (DESIGN.md §14).
 
         Dynamic engines restore their tracked Laplacians, per-graph
         versions, baselines and controller counters; checkpoints written
@@ -809,7 +881,7 @@ class FGFTServeEngine:
                      else serve_meta.get("precision", "f32"),
                      fused=fused if fused is not None
                      else serve_meta.get("fused", True),
-                     block_b=block_b)
+                     block_b=block_b, placement=placement)
         from dataclasses import replace as _replace
         engine._live = _replace(
             engine._live, version=int(basis.info.get("version", 0)))
@@ -852,6 +924,81 @@ def bucket_width(n: int, min_width: int = 8) -> int:
     return w
 
 
+def _resolve_fleet_placement(placement, mesh, bucket_of):
+    """Normalize the router's ``placement`` argument.
+
+    ``None`` -> unplaced; ``"auto"`` -> work-weighted partition of the
+    mesh's data-axis devices over the buckets (weight ~ members * w log
+    w, the per-bucket apply cost); a ``FleetPlacement`` is validated
+    against the router's bucket geometry so a stale manifest fails
+    loudly instead of mis-routing."""
+    if placement is None:
+        return None
+    from repro.runtime.sharding import FleetPlacement, fleet_placement
+    if isinstance(placement, str):
+        if placement != "auto":
+            raise ValueError(f"placement must be None, 'auto' or a "
+                             f"FleetPlacement, got {placement!r}")
+        if mesh is None:
+            raise ValueError("placement='auto' requires a mesh to "
+                             "partition (pass mesh=)")
+        sizes = {w: len(m) for w, m in bucket_of.items()}
+        weights = {w: len(m) * w * float(np.log2(max(w, 2)))
+                   for w, m in bucket_of.items()}
+        return fleet_placement(mesh, sizes, weights=weights)
+    if not isinstance(placement, FleetPlacement):
+        raise TypeError(f"placement must be None, 'auto' or a "
+                        f"FleetPlacement, got {type(placement).__name__}")
+    missing = sorted(set(bucket_of) - {k for k, _ in placement.items()})
+    if missing:
+        raise ValueError(f"placement has no entry for bucket(s) "
+                         f"{missing}")
+    for w, members in bucket_of.items():
+        if placement[w].batch != len(members):
+            raise ValueError(
+                f"placement bucket {w} sized for batch "
+                f"{placement[w].batch}, fleet has {len(members)} graphs "
+                f"there — re-place with fleet_placement on the current "
+                f"fleet")
+    return placement
+
+
+def _read_placement_manifest(path, bucket_of):
+    """Parse + validate a saved placement.json; None if absent.
+
+    The manifest is advisory (readers re-place on their own mesh) but
+    its SHAPE is contract: a truncated or hand-mangled file raises a
+    clear ValueError instead of silently loading an unplaced fleet."""
+    import json
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    try:
+        pm = json.loads(path.read_text())
+        num_devices = int(pm["num_devices"])
+        buckets = {int(k): {"device_ids": [int(i) for i in
+                                           v["device_ids"]],
+                            "batch": int(v["batch"])}
+                   for k, v in pm["buckets"].items()}
+        if num_devices < 1 or not buckets:
+            raise ValueError("num_devices < 1 or no buckets")
+        for k, v in buckets.items():
+            if not v["device_ids"] or v["batch"] < 1:
+                raise ValueError(f"bucket {k} has empty device_ids or "
+                                 f"non-positive batch")
+    except (KeyError, TypeError, ValueError,
+            json.JSONDecodeError) as exc:
+        raise ValueError(
+            f"corrupt placement manifest {path}: {exc} — re-save the "
+            f"fleet or delete the file to load unplaced") from exc
+    missing = sorted(set(bucket_of) - set(buckets))
+    if missing:
+        raise ValueError(
+            f"placement manifest {path} missing bucket(s) {missing} "
+            f"present in router.json — checkpoint is inconsistent")
+    return buckets
+
+
 class RaggedFGFTServeEngine:
     """Size-bucketed serving for a HETEROGENEOUS graph fleet.
 
@@ -869,6 +1016,13 @@ class RaggedFGFTServeEngine:
     ``num_transforms``: components per graph for the LARGEST bucket;
     smaller buckets scale as w log2 w (the paper's g = alpha n log2 n
     regime keeps alpha constant across the fleet).  0 -> 2 w log2 w.
+
+    ``placement``: ``"auto"`` partitions the mesh's data-axis devices
+    over the buckets (whole buckets per device subset, work-weighted;
+    ``runtime.sharding.fleet_placement``), or pass a prebuilt
+    ``FleetPlacement``.  Placed routers serve each bucket on its OWN
+    devices — steady-state steps run collective-free, and a dirty
+    bucket's refit touches only that bucket's devices (DESIGN.md §14).
     """
 
     def __init__(self, laps, num_transforms: int = 0, n_iter: int = 3,
@@ -878,7 +1032,7 @@ class RaggedFGFTServeEngine:
                  tiers: Optional[Dict[str, float]] = None,
                  min_width: int = 8, dynamic: bool = False, policy=None,
                  precision: str = "f32", fused: bool = True,
-                 block_b: Optional[int] = None,
+                 block_b: Optional[int] = None, placement=None,
                  _engines: Optional[Dict[int, FGFTServeEngine]] = None):
         from repro.core import pad_ragged
         laps = [np.asarray(lap, np.float32) for lap in laps]
@@ -894,6 +1048,8 @@ class RaggedFGFTServeEngine:
         for pos, w in enumerate(self.widths):
             self.bucket_of.setdefault(w, []).append(pos)
         w_max = max(self.bucket_of)
+        self.placement = _resolve_fleet_placement(placement, mesh,
+                                                  self.bucket_of)
 
         def scaled_g(w: int) -> int:
             if not num_transforms:
@@ -912,7 +1068,9 @@ class RaggedFGFTServeEngine:
                 mesh=mesh, filters=filters, kind=kind, hint=hint,
                 tiers=tiers, sizes=None if np.all(sizes == w) else sizes,
                 dynamic=dynamic, policy=policy, precision=precision,
-                fused=fused, block_b=block_b)
+                fused=fused, block_b=block_b,
+                placement=(None if self.placement is None
+                           else self.placement[w]))
 
     def __len__(self) -> int:
         return len(self.sizes)
@@ -1021,12 +1179,26 @@ class RaggedFGFTServeEngine:
                 out[pos] = d[row]
         return out
 
-    def maintain(self) -> dict:
+    def maintain(self, buckets=None, dirty_only: bool = False) -> dict:
         """One controller tick per bucket; buckets refit and swap
         independently (a burst of updates to small graphs never blocks
-        the big bucket's serving version)."""
-        return {w: eng.maintain() for w, eng in sorted(
-            self.engines.items())}
+        the big bucket's serving version).
+
+        ``buckets`` restricts the tick to those widths.  ``dirty_only``
+        skips buckets with no pending updates entirely — on a placed
+        router that means maintenance touches ONLY devices owning dirty
+        buckets while every other device keeps serving undisturbed
+        (device-overlapped maintenance, DESIGN.md §14)."""
+        sel = (sorted(self.engines) if buckets is None
+               else [int(w) for w in buckets])
+        out = {}
+        for w in sel:
+            eng = self.engines[w]
+            if dirty_only and not bool(
+                    np.any(getattr(eng, "_dirty", False))):
+                continue
+            out[w] = eng.maintain()
+        return out
 
     @property
     def versions(self) -> np.ndarray:
@@ -1045,17 +1217,25 @@ class RaggedFGFTServeEngine:
         router geometry, so ``load`` rebuilds the fleet without
         refitting."""
         import json
+        import os
         directory = pathlib.Path(directory)
         directory.mkdir(parents=True, exist_ok=True)
         for w, eng in self.engines.items():
             eng.save(directory / f"bucket_{w:05d}", step)
         # atomic manifest write: the bucket checkpoints survive a crashed
         # writer (DESIGN.md §6), so the router geometry must too
-        import os
         tmp = directory / "router.json.tmp"
         tmp.write_text(json.dumps(
             {"sizes": self.sizes, "widths": self.widths, "step": step}))
         os.replace(tmp, directory / "router.json")
+        if self.placement is not None:
+            # placement manifest (DESIGN.md §14): records which devices
+            # owned which bucket at save time.  Advisory on load — a
+            # reader with a different mesh re-places — but its shape is
+            # validated, so corruption fails loudly
+            tmp = directory / "placement.json.tmp"
+            tmp.write_text(json.dumps(self.placement.manifest()))
+            os.replace(tmp, directory / "placement.json")
         return directory
 
     @classmethod
@@ -1066,19 +1246,46 @@ class RaggedFGFTServeEngine:
              dynamic: Optional[bool] = None, policy=None,
              precision: Optional[str] = None,
              fused: Optional[bool] = None,
-             block_b: Optional[int] = None) -> "RaggedFGFTServeEngine":
+             block_b: Optional[int] = None,
+             placement=None) -> "RaggedFGFTServeEngine":
+        """Rebuild a fleet router from its per-bucket checkpoints.
+
+        ``placement``: ``None`` re-uses the saved placement manifest (if
+        any) by RE-PLACING onto the current mesh/devices — a checkpoint
+        written on a 4-device mesh loads fine on 1 or 8 devices, the
+        manifest's device ids are provenance, not a requirement.
+        ``"auto"``/``FleetPlacement`` force a placement; pass
+        ``placement=False`` to load unplaced even when a manifest
+        exists."""
         import json
         directory = pathlib.Path(directory)
         manifest = json.loads((directory / "router.json").read_text())
         if step is None:
             step = int(manifest["step"])
+        widths = [int(w) for w in manifest["widths"]]
+        bucket_of: Dict[int, list] = {}
+        for pos, w in enumerate(widths):
+            bucket_of.setdefault(w, []).append(pos)
+        saved = _read_placement_manifest(directory / "placement.json",
+                                         bucket_of)
+        if placement is False:
+            placement = None
+        elif placement is None and saved is not None:
+            # saved manifest + no override: re-place on whatever devices
+            # THIS process has (shard-aware restore reassembles full
+            # arrays, so any mesh shape works)
+            if mesh is None:
+                mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+            placement = "auto"
+        fp = _resolve_fleet_placement(placement, mesh, bucket_of)
         engines: Dict[int, FGFTServeEngine] = {}
-        for w in sorted({int(x) for x in manifest["widths"]}):
+        for w in sorted(bucket_of):
             engines[w] = FGFTServeEngine.load(
                 directory / f"bucket_{w:05d}", step, backend=backend,
                 mesh=mesh, filters=filters, tiers=tiers, dynamic=dynamic,
                 policy=policy, precision=precision, fused=fused,
-                block_b=block_b)
+                block_b=block_b,
+                placement=None if fp is None else fp[w])
         # rebuild request-order geometry from the restored laps (pads are
         # zero, so per-graph denominators crop for free)
         laps = []
@@ -1095,10 +1302,9 @@ class RaggedFGFTServeEngine:
         # restore the PERSISTED routing geometry: the constructor
         # recomputed widths with the default min_width, which diverges
         # for routers built with a custom one
-        router.widths = [int(w) for w in manifest["widths"]]
-        router.bucket_of = {}
-        for pos, w in enumerate(router.widths):
-            router.bucket_of.setdefault(w, []).append(pos)
+        router.widths = widths
+        router.bucket_of = bucket_of
+        router.placement = fp
         return router
 
 

@@ -572,7 +572,14 @@ class AsyncFGFTService:
     def _maintain_tick(self) -> dict:
         before = self._swap_version()
         try:
-            res = self.engine.maintain()
+            if (getattr(self.engine, "placement", None) is not None
+                    and hasattr(self.engine, "engines")):
+                # placed router: tick ONLY dirty buckets, so refit work
+                # lands exclusively on the devices owning them while the
+                # rest of the mesh keeps serving (DESIGN.md §14)
+                res = self.engine.maintain(dirty_only=True)
+            else:
+                res = self.engine.maintain()
         except Exception as exc:  # noqa: BLE001 — a failed refit must not kill serving
             with self._cond:
                 self._maintain_errors += 1
@@ -643,6 +650,12 @@ class AsyncFGFTService:
                     "swaps": self._swaps,
                 },
             }
+            fp = getattr(self.engine, "placement", None)
+            if fp is not None:
+                snap["placement"] = (
+                    fp.manifest() if hasattr(fp, "manifest")
+                    else {"device_ids": list(fp.device_ids),
+                          "batch": int(fp.batch)})
         snap["latency"] = self.latency.summary()
         return snap
 

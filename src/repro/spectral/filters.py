@@ -17,7 +17,7 @@ scaling function).
 
 ``SpectralFilter``/``SpectralFilterBank`` bind responses to a fitted
 ``ApproxEigenbasis``; ``SpectralFilterBank.apply`` routes a whole bank
-through one fused dispatch (kernels/spectral.py via kernels/ops.py) so the
+through one fused dispatch (kernels/spectral.py via an ApplyPlan) so the
 analysis transform is paid once for all F filters.
 """
 from __future__ import annotations
@@ -244,17 +244,12 @@ class SpectralFilterBank:
         runs the one-launch kernel).  ``fused=False`` is the per-filter
         composition — kept as the semantics baseline and the thing
         benchmarks/fig8_spectral.py races against."""
-        from repro.kernels import ops as kops
+        from repro.kernels.plan import ApplyPlan
         basis = self.basis
         if not fused:
             axis = 1 if basis.batched else 0
             return jnp.stack([f.apply(x, backend=backend)
                               for f in self.filters], axis=axis)
-        gains = self.gains()
-        if basis.kind == "sym":
-            fn = (kops.batched_sym_filter_bank if basis.batched
-                  else kops.sym_filter_bank)
-        else:
-            fn = (kops.batched_gen_filter_bank if basis.batched
-                  else kops.gen_filter_bank)
-        return fn(basis.fwd, basis.bwd, gains, x, backend=backend)
+        plan = ApplyPlan.for_staged(basis.fwd, mode="bank",
+                                    backend=backend)
+        return plan.bank(basis.fwd, basis.bwd, self.gains(), x)

@@ -1,5 +1,8 @@
+import json
 import os
+import subprocess
 import sys
+import textwrap
 import threading
 
 # Tests must see ONE CPU device (the dry-run's 512-device forcing is local
@@ -9,6 +12,40 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import pytest  # noqa: E402
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_in_mesh_subprocess(script: str, devices: int = 8,
+                           timeout: float = 600.0) -> dict:
+    """Run ``script`` in a fresh interpreter with ``devices`` forced host
+    CPU devices; return its LAST stdout line parsed as JSON.
+
+    XLA fixes the device count at first ``import jax``, so multi-device
+    tests cannot run in the main pytest process (conftest pins it to one
+    CPU device).  The shared idiom: prepend the XLA_FLAGS forcing BEFORE
+    any import the script does, launch with a minimal env, and let the
+    script print one JSON result line (anything it prints earlier is
+    ignored, so debug prints don't break parsing).  Raises AssertionError
+    with the subprocess stderr tail on a non-zero exit."""
+    body = textwrap.dedent(script)
+    prelude = ("import os\n"
+               f'os.environ["XLA_FLAGS"] = '
+               f'"--xla_force_host_platform_device_count={int(devices)}"\n')
+    out = subprocess.run(
+        [sys.executable, "-c", prelude + body], capture_output=True,
+        text=True, timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get(
+                 "PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/root"),
+             "JAX_PLATFORMS": "cpu"},
+        cwd=_REPO_ROOT)
+    assert out.returncode == 0, (
+        f"mesh subprocess failed (exit {out.returncode}):\n"
+        f"{out.stderr[-3000:]}")
+    lines = out.stdout.strip().splitlines()
+    assert lines, f"mesh subprocess printed nothing:\n{out.stderr[-2000:]}"
+    return json.loads(lines[-1])
 
 
 # ---------------------------------------------------------------------------

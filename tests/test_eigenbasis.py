@@ -6,7 +6,8 @@ import pytest
 
 from repro.core import (ApproxEigenbasis, approximate_general,
                         approximate_symmetric)
-from repro.kernels import ops
+from repro.core.staging import pack_g_pair
+from repro.kernels.plan import ApplyPlan
 
 
 def _sym_batch(b, n, seed=0):
@@ -93,9 +94,10 @@ def test_batched_apply_matches_per_matrix_staged_apply():
         (b, 3, n)).astype(np.float32))
     got = np.asarray(basis.project(x))
     for i in range(b):
-        fwd, adj = ops.stage_g(_gfactors_slice(basis.factors, i))
-        want = np.asarray(ops.sym_operator(fwd, adj, basis.spectrum[i],
-                                           x[i]))
+        fwd, adj = pack_g_pair(_gfactors_slice(basis.factors, i))
+        plan = ApplyPlan.for_staged(fwd, mode="operator")
+        want = np.asarray(plan.operator(fwd, adj, basis.spectrum[i],
+                                        x[i]))
         np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
 
 
@@ -242,8 +244,8 @@ def test_select_tier_and_prefix_project_matches_prefix_basis(sym_batch48):
     for i in range(3):
         f = _gfactors_slice(basis.factors, i)
         pre = GFactors(*(arr[48 - k:] for arr in f))
-        fwd, _ = ops.stage_g(pre)
-        want = ops.g_apply(fwd, x[i])
+        fwd, _ = pack_g_pair(pre)
+        want = ApplyPlan.for_staged(fwd, mode="apply").apply(fwd, x[i])
         np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
 

@@ -6,9 +6,10 @@ import pytest
 
 from repro.core import (approximate_symmetric, approximate_general,
                         pack_g, pack_g_adjoint, pack_t, pack_t_inverse)
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels import butterfly as bf
 from repro.kernels import shear as sh
+from repro.kernels.plan import ApplyPlan
 
 
 def _staged_g(n, g, seed=0):
@@ -78,16 +79,20 @@ def test_fused_gen_kernel(b, n):
                                rtol=1e-4, atol=1e-4)
 
 
-def test_ops_backend_switch_and_nd_shapes():
+def test_plan_backend_switch_and_nd_shapes():
     fwd, adj, sbar = _staged_g(16, 32, seed=9)
     x = jnp.asarray(np.random.default_rng(5).standard_normal((3, 5, 16)),
                     jnp.float32)
-    y_x = ops.g_apply(fwd, x, backend="xla")
-    y_p = ops.g_apply(fwd, x, backend="pallas")
+
+    def apply(backend):
+        return ApplyPlan.for_staged(fwd, mode="apply",
+                                    backend=backend).apply(fwd, x)
+
+    y_x, y_p = apply("xla"), apply("pallas")
     assert y_x.shape == x.shape
     np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p), atol=1e-6)
     with pytest.raises(ValueError):
-        ops.g_apply(fwd, x, backend="cuda")
+        apply("cuda")
 
 
 def test_block_b_tiling_boundaries():
@@ -159,25 +164,27 @@ def test_fused_prefix_parity_all_tiers():
                                    rtol=1e-4, atol=1e-4)
 
 
-def test_ops_prefix_backend_parity_and_bank():
-    """ops-level switch: xla and pallas agree at a mid-ladder boundary for
-    the plain, fused and filter-bank paths."""
+def test_plan_prefix_backend_parity_and_bank():
+    """plan-level switch: xla and pallas agree at a mid-ladder boundary
+    for the plain, fused and filter-bank paths."""
     from repro.core.staging import select_cut
     fwd, adj, sbar = _staged_g(16, 32, seed=15)
     s, _ = select_cut(fwd, fraction=0.5)
     x = jnp.asarray(np.random.default_rng(10).standard_normal((2, 3, 16)),
                     jnp.float32)
-    y_x = ops.g_apply(fwd, x, backend="xla", num_stages=s, keep="tail")
-    y_p = ops.g_apply(fwd, x, backend="pallas", num_stages=s, keep="tail")
+
+    def plan(mode, backend, keep="head"):
+        return ApplyPlan.for_staged(fwd, mode=mode, backend=backend,
+                                    num_stages=s, keep=keep)
+
+    y_x = plan("apply", "xla", keep="tail").apply(fwd, x)
+    y_p = plan("apply", "pallas", keep="tail").apply(fwd, x)
     np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p), atol=1e-6)
-    o_x = ops.sym_operator(fwd, adj, sbar, x, backend="xla", num_stages=s)
-    o_p = ops.sym_operator(fwd, adj, sbar, x, backend="pallas",
-                           num_stages=s)
+    o_x = plan("operator", "xla").operator(fwd, adj, sbar, x)
+    o_p = plan("operator", "pallas").operator(fwd, adj, sbar, x)
     np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p), atol=1e-5)
     gains = jnp.asarray(np.random.default_rng(11).standard_normal(
         (3, 16)), jnp.float32)
-    b_x = ops.sym_filter_bank(fwd, adj, gains, x[0], backend="xla",
-                              num_stages=s)
-    b_p = ops.sym_filter_bank(fwd, adj, gains, x[0], backend="pallas",
-                              num_stages=s)
+    b_x = plan("bank", "xla").bank(fwd, adj, gains, x[0])
+    b_p = plan("bank", "pallas").bank(fwd, adj, gains, x[0])
     np.testing.assert_allclose(np.asarray(b_x), np.asarray(b_p), atol=1e-5)

@@ -1,15 +1,11 @@
 """Multi-pod features that need >1 device: run in a subprocess with forced
-host devices (keeps the main test process at 1 device)."""
-import json
-import subprocess
-import sys
-import textwrap
-
+host devices (conftest.run_in_mesh_subprocess keeps the main test process
+at 1 device)."""
 import pytest
 
-_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from conftest import run_in_mesh_subprocess
+
+_SCRIPT = """
     import json
     import jax
     import jax.numpy as jnp
@@ -41,7 +37,7 @@ _SCRIPT = textwrap.dedent("""
     print(json.dumps({"losses": losses,
                       "cross_pod": terms["cross_pod_bytes"],
                       "total": terms["collective_bytes"]}))
-""")
+"""
 
 
 @pytest.mark.slow
@@ -50,14 +46,8 @@ _SCRIPT = textwrap.dedent("""
     reason="nested partial-manual shard_map needs jax>=0.6: the 0.4.x XLA "
            "aborts with 'Check failed: sharding.IsManualSubgroup()' "
            "(runtime/steps.py shims the API, but not the compiler)")
-def test_pod_compressed_step_runs_and_reduces_cross_pod(tmp_path):
-    out = subprocess.run(
-        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
-        timeout=600, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-        cwd="/root/repo")
-    assert out.returncode == 0, out.stderr[-2000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+def test_pod_compressed_step_runs_and_reduces_cross_pod():
+    res = run_in_mesh_subprocess(_SCRIPT, devices=8)
     # losses finite and step executes repeatedly (EF buffers thread through)
     assert all(l == l and l < 1e4 for l in res["losses"]), res
     # cross-pod collective traffic is a small fraction of total traffic

@@ -6,8 +6,9 @@ import pytest
 
 from repro.core import ApproxEigenbasis, laplacian
 from repro.graphs import community_graph, directed_variant
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels import spectral as ksp
+from repro.kernels.plan import ApplyPlan
 from repro import spectral as sp
 
 N = 32
@@ -83,10 +84,13 @@ def test_batched_plain_apply_pallas_parity(sym_batched):
     """The batched plain-apply kernels (new backend='pallas' route)."""
     _, basis = sym_batched
     x = _signals((3, 7, N), seed=4)
-    np.testing.assert_allclose(
-        np.asarray(ops.batched_g_apply(basis.fwd, x, backend="pallas")),
-        np.asarray(ops.batched_g_apply(basis.fwd, x, backend="xla")),
-        rtol=1e-5, atol=1e-5)
+    def apply(backend):
+        plan = ApplyPlan.for_staged(basis.fwd, mode="apply",
+                                    backend=backend)
+        return np.asarray(plan.apply(basis.fwd, x))
+
+    np.testing.assert_allclose(apply("pallas"), apply("xla"),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_block_tiling_boundary():
