@@ -1,19 +1,26 @@
-"""Diff two bench-json directories and annotate perf regressions.
+"""Diff two bench-json directories: hard-ratchet structural counters,
+annotate (warn-only) timing regressions.
 
-Usage (CI; warn-only — the exit code is always 0):
+Usage (CI):
 
   python -m benchmarks._diff <previous-dir> <current-dir> [--threshold 0.2]
 
 Compares the ``BENCH_<name>.json`` artifacts the benchmark runner writes
 (benchmarks/run.py ``--json-dir``) between the previous successful run
-and the current one, and prints GitHub workflow ``::warning::``
-annotations when
+and the current one.  Two severities:
 
-  * a benchmark flipped from pass to fail,
-  * its wall time (``elapsed_s``) grew by more than the threshold, or
-  * a HIGHER-IS-BETTER column's best (max) value dropped by more than
-    the threshold — speedup/throughput columns regressing is exactly
-    the trajectory signal the artifacts exist to catch.
+  * STRUCTURAL counters — columns counting compiles or plan-cache
+    misses (name contains ``compile``/``miss``) are deterministic by
+    construction, so ANY growth over the previous run is a real change
+    someone made, never noise: these print ``::error::`` annotations
+    and FAIL the diff (exit 1).  Shrinking is an improvement and passes.
+  * TIMINGS stay warn-only (``::warning::``, exit 0 contribution) —
+    wall clock on shared CI runners is noisy:
+      - a benchmark flipped from pass to fail,
+      - wall time (``elapsed_s``) grew by more than the threshold,
+      - a HIGHER-IS-BETTER column's best (max) value dropped by more
+        than the threshold — speedup/throughput regressing is exactly
+        the trajectory signal the artifacts exist to catch.
 
 Columns are matched BY NAME via the ``columns`` header the runner
 records alongside the rows (benchmarks/common.py).  Names that are
@@ -44,6 +51,9 @@ import sys
 _HIGHER_IS_BETTER = ("speedup", "per_s")
 #: fused-path timing columns (fig8/fig13): best = MIN, growth = warning
 _FUSED_TIMINGS = ("fused_ms", "fused_us")
+#: structural counter columns (compile counts, plan-cache misses —
+#: fig13/fig14/fig15): deterministic, so growth is a hard failure
+_STRUCTURAL = ("compile", "miss")
 #: tuned fields of one autotune.json entry worth a flip warning
 _TUNED_FIELDS = ("block_b", "num_chunks")
 
@@ -80,6 +90,33 @@ def _fused_column_mins(rows, columns):
     vals = _column_values(rows, columns,
                           lambda n: n in _FUSED_TIMINGS)
     return {name: min(v) for name, v in vals.items()}
+
+
+def _structural_column_maxes(rows, columns):
+    """Worst (max) value per NAMED structural-counter column."""
+    vals = _column_values(
+        rows, columns,
+        lambda n: any(tag in n.lower() for tag in _STRUCTURAL))
+    return {name: max(v) for name, v in vals.items()}
+
+
+def diff_structural(prev: dict, curr: dict) -> list:
+    """Hard-ratchet violations for one benchmark pair: a structural
+    counter's worst (max) value GREW.  No threshold — these counts are
+    deterministic, so any growth is a change, not noise."""
+    name = curr.get("benchmark", "?")
+    notes = []
+    prev_cols = _structural_column_maxes(prev.get("rows"),
+                                         prev.get("columns"))
+    curr_cols = _structural_column_maxes(curr.get("rows"),
+                                         curr.get("columns"))
+    for col, pv in sorted(prev_cols.items()):
+        cv = curr_cols.get(col)
+        if cv is not None and cv > pv:
+            notes.append(f"{name}: structural counter {col} grew "
+                         f"{pv:.4g} -> {cv:.4g} (compile/miss counts "
+                         f"only ratchet down)")
+    return notes
 
 
 def diff_autotune(prev: dict, curr: dict) -> list:
@@ -150,7 +187,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     prev_dir = pathlib.Path(args.previous)
     curr_dir = pathlib.Path(args.current)
-    warned = 0
+    warned = failed = 0
     for curr_path in sorted(curr_dir.glob("BENCH_*.json")):
         prev_path = prev_dir / curr_path.name
         if not prev_path.exists():
@@ -163,12 +200,16 @@ def main(argv=None) -> int:
         except (OSError, json.JSONDecodeError) as exc:
             print(f"[bench-diff] {curr_path.name}: unreadable ({exc})")
             continue
+        errors = diff_structural(prev, curr)
+        for note in errors:
+            print(f"::error title=bench structural ratchet::{note}")
+            failed += 1
         notes = diff_records(prev, curr, args.threshold)
         for note in notes:
             # GitHub annotation; plain line for local runs
             print(f"::warning title=bench regression::{note}")
             warned += 1
-        if not notes:
+        if not notes and not errors:
             print(f"[bench-diff] {curr_path.name}: ok")
     prev_at, curr_at = prev_dir / "autotune.json", curr_dir / "autotune.json"
     if prev_at.exists() and curr_at.exists():
@@ -183,9 +224,11 @@ def main(argv=None) -> int:
             warned += 1
         if not at_notes:
             print("[bench-diff] autotune.json: tile choices stable")
-    print(f"[bench-diff] {warned} regression warning(s) "
+    print(f"[bench-diff] {failed} structural ratchet failure(s), "
+          f"{warned} regression warning(s) "
           f"(threshold {args.threshold:.0%})")
-    return 0    # warn-only by design: annotations, never a failed job
+    # timings stay warn-only; structural counter growth fails the job
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -43,7 +43,7 @@ from repro.core import ApproxEigenbasis
 from repro.core.fgft import laplacian
 from repro.graphs import community_graph
 from repro.kernels import autotune
-from repro.kernels.plan import ApplyPlan, plan_cache_size
+from repro.kernels.plan import ApplyPlan, plan_cache_stats
 from repro.spectral import (SpectralFilterBank, named_responses,
                             response_lipschitz)
 from .common import emit, time_call
@@ -174,7 +174,7 @@ def _compile_stability(fast):
     engine.step_bank(x)
     prog = engine._live.fns[engine.default_tier]
     compiles = prog._cache_size()
-    plans = plan_cache_size()
+    stats0 = plan_cache_stats()
     swaps = 3 if fast else 5
     for _ in range(swaps):              # same-shape hot swaps
         engine._install(engine.basis, jnp.asarray(laps))
@@ -183,13 +183,20 @@ def _compile_stability(fast):
         gate_assert(engine._live.fns[engine.default_tier] is prog,
                     "same-shape swap must rebind the IDENTICAL cached "
                     "plan program object")
+    stats1 = plan_cache_stats()
     gate_assert(prog._cache_size() == compiles,
                 f"steady-state swaps must not recompile the tier "
                 f"program ({compiles} -> {prog._cache_size()})")
-    gate_assert(plan_cache_size() == plans,
-                f"steady-state swaps must not grow the plan cache "
-                f"({plans} -> {plan_cache_size()})")
-    return [[swaps, engine._live.version, compiles, plans]]
+    gate_assert(stats1["misses"] == stats0["misses"]
+                and stats1["currsize"] == stats0["currsize"],
+                f"steady-state swaps must be pure plan-cache hits "
+                f"(misses {stats0['misses']} -> {stats1['misses']}, "
+                f"size {stats0['currsize']} -> {stats1['currsize']})")
+    gate_assert(stats1["hits"] > stats0["hits"],
+                "swaps must actually exercise the plan cache (hit "
+                "count did not move — did _install stop using plans?)")
+    return [[swaps, engine._live.version, compiles,
+             stats1["currsize"], stats1["misses"] - stats0["misses"]]]
 
 
 def run(fast: bool = False):
@@ -211,7 +218,7 @@ def run(fast: bool = False):
     stab_rows = _compile_stability(fast)
     emit("fig13_compile_stability (same-shape serve swaps)",
          stab_rows, ["swaps", "live_version", "jit_compiles",
-                     "plan_cache"])
+                     "plan_cache", "plan_miss_delta"])
 
     for backend, s in best.items():
         print(f"fused plan vs three-pass [{backend}]: best {s:.2f}x")

@@ -93,6 +93,8 @@ _PRELUDE = """
     def compile_total(router):
         return sum(fn._cache_size() for eng in router.engines.values()
                    for fn in eng._live.fns.values())
+
+    from repro.kernels.plan import plan_cache_stats
 """
 
 
@@ -154,6 +156,7 @@ _WORKER = """
     # --- overlapped maintenance: serve CLEAN buckets while one dirty ----
     # bucket refits on its own sub-mesh devices ------------------------
     compiles_before = compile_total(r)
+    plan_misses_before = plan_cache_stats()["misses"]
     ratio = p99_base = p99_maint = None
     if @MAINT@:
         dirty_pos = 0                     # first graph -> its bucket
@@ -203,6 +206,8 @@ _WORKER = """
         "placed": r.placement is not None,
         "compiles": compiles_before,
         "compiles_after_maintain": compiles_after,
+        "plan_misses": plan_misses_before,
+        "plan_misses_after_maintain": plan_cache_stats()["misses"],
         "collectives": collectives,
         "p50_ms": p50, "graphs_per_s": graphs_per_s,
         "p99_base_ms": p99_base, "p99_maint_ms": p99_maint,
@@ -260,28 +265,42 @@ def run(fast: bool = False):
     for devices in _DEVICE_COUNTS:
         res = results[devices]
         rows.append([devices, res["compiles"],
-                     res["compiles_after_maintain"], res["collectives"],
+                     res["compiles_after_maintain"], res["plan_misses"],
+                     res["collectives"],
                      res["p50_ms"], res["p99_base_ms"],
                      res["p99_maint_ms"], res["maint_ratio"],
                      res["max_diff"], gen["max_diff"],
                      res["graphs_per_s"], res["graphs_per_s"] / thr1])
     emit("fig14_fleet", rows,
          ["devices", "compiled_programs", "compiled_after_maintain",
-          "collective_ops", "step_p50_ms", "p99_base_ms", "p99_maint_ms",
-          "maint_p99_ratio", "sym_max_diff", "general_max_diff",
-          "graphs_per_s", "scale_speedup"])
+          "plan_misses", "collective_ops", "step_p50_ms", "p99_base_ms",
+          "p99_maint_ms", "maint_p99_ratio", "sym_max_diff",
+          "general_max_diff", "graphs_per_s", "scale_speedup"])
 
     # 1. flat compile counts + nothing new after a same-shape hot swap
+    # (both the jit-level program counts and the plan-cache miss
+    # counters of kernels/plan.py::plan_cache_stats must agree: the
+    # placed plans differ in WHERE their tables live, never in how many
+    # distinct programs the fleet compiles)
     compiles = {d: results[d]["compiles"] for d in _DEVICE_COUNTS}
     gate_assert(len(set(compiles.values())) == 1,
                 f"compiled-program count must be flat across device "
                 f"counts, got {compiles}", rows)
+    plan_misses = {d: results[d]["plan_misses"] for d in _DEVICE_COUNTS}
+    gate_assert(len(set(plan_misses.values())) == 1,
+                f"plan-cache miss count must be flat across device "
+                f"counts, got {plan_misses}", rows)
     final = _DEVICE_COUNTS[-1]
     gate_assert(results[final]["compiles_after_maintain"]
                 == results[final]["compiles"],
                 f"same-shape hot swap must compile nothing: "
                 f"{results[final]['compiles']} -> "
                 f"{results[final]['compiles_after_maintain']}", rows)
+    gate_assert(results[final]["plan_misses_after_maintain"]
+                == results[final]["plan_misses"],
+                f"same-shape hot swap must add no plan-cache misses: "
+                f"{results[final]['plan_misses']} -> "
+                f"{results[final]['plan_misses_after_maintain']}", rows)
     # 2. zero steady-state collectives, every fleet
     gate_assert(all(results[d]["collectives"] == 0
                     for d in _DEVICE_COUNTS) and gen["collectives"] == 0,

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from repro.core import ApproxEigenbasis
 from repro.core import gtransform as gt
 from repro.core.eigenbasis import _sym_fit_program
-from repro.kernels.plan import ApplyPlan, clear_plan_cache
+from repro.kernels.plan import (ApplyPlan, clear_plan_cache,
+                                plan_cache_stats)
 from .common import emit, time_call
 from .run import gate_assert
 
@@ -50,6 +51,7 @@ def run(fast: bool = False):
     r_grid = (4, 8, 32)
     rows = []
     program_counts = []
+    plan_stats_checks = []
     best_fit = best_apply = 0.0
     depth_ratio_worst = 0.0
     for b, n, g in grid:
@@ -106,6 +108,16 @@ def run(fast: bool = False):
         def loop_op(xs):
             return [single_ops[i](xs[i]) for i in range(b)]
 
+        # plan-cache accounting (kernels/plan.py::plan_cache_stats):
+        # clear_plan_cache above zeroed hits/misses, and every program()
+        # since went through THE plan cache — misses must equal the
+        # number of DISTINCT plans built for this entry (equal plans
+        # share one compiled program), with everything else a hit
+        pstats = plan_cache_stats()
+        distinct_plans = len({bplan, *splans})
+        plan_stats_checks.append(
+            (pstats["misses"], pstats["currsize"], distinct_plans))
+
         apply_speedup, t_bop, t_lop = 0.0, 1.0, 1.0
         for _ in range(_RETRIES):
             for r in r_grid:
@@ -153,6 +165,13 @@ def run(fast: bool = False):
                 f"entry per argument shape (batched: {len(r_grid)}; "
                 f"singles: R-grid x distinct table shapes per plan), "
                 f"got (actual, expected) {program_counts}", rows)
+    gate_assert(all(misses == want and currsize == want
+                    for misses, currsize, want in plan_stats_checks),
+                f"plan-cache stats parity broken: per grid entry the "
+                f"miss count and resident size must both equal the "
+                f"number of distinct plans built (shared plans are "
+                f"hits), got (misses, currsize, distinct) "
+                f"{plan_stats_checks}", rows)
     # deterministic structural gate: chunk-uniform padding may add a few
     # stages over the worst single fit, never a constant factor
     gate_assert(depth_ratio_worst <= 1.25,

@@ -18,6 +18,7 @@ import argparse
 import importlib
 import json
 import math
+import os
 import pathlib
 import sys
 import time
@@ -113,7 +114,38 @@ def main(argv=None):
         if json_dir is not None:
             (json_dir / f"BENCH_{name}.json").write_text(
                 json.dumps(record, indent=1))
+        _export_trace(name)
+    _export_metrics()
     return 1 if failures else 0
+
+
+def _obs_dir():
+    out = os.environ.get("REPRO_METRICS_DIR")
+    return pathlib.Path(out) if out else None
+
+
+def _export_trace(name):
+    """When ``$REPRO_METRICS_DIR`` is set (CI), drop ``trace_<bench>.json``
+    next to the BENCH artifacts; the tracer is cleared after each export
+    so every file holds exactly one benchmark's spans."""
+    out = _obs_dir()
+    if out is None:
+        return
+    from repro import obs
+    obs.export_trace(out / f"trace_{name}.json")
+    obs.default_tracer().clear()
+
+
+def _export_metrics():
+    """One merged ``metrics.json``/``metrics.prom`` per PROCESS (the
+    registry is cumulative, so a per-benchmark merge inside one process
+    would double-count); CI's one-process-per-benchmark loop accumulates
+    the file across processes via the merge."""
+    out = _obs_dir()
+    if out is None:
+        return
+    from repro import obs
+    obs.export_metrics(out, merge=True)
 
 
 def gate_assert(cond, msg, rows=None):

@@ -28,7 +28,16 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro import obs
+
 _STEP_RE = re.compile(r"step_(\d+)$")
+
+# checkpoint I/O telemetry (DESIGN.md §15): counters in the registry,
+# one timed span per save/restore in the trace
+_OBS_SAVES = obs.counter("checkpoint_saves_total",
+                         "committed checkpoint saves")
+_OBS_RESTORES = obs.counter("checkpoint_restores_total",
+                            "checkpoint restores")
 
 
 def _tree_paths(tree) -> list:
@@ -49,6 +58,8 @@ def save_checkpoint(directory, step: int, state, *, metadata: Optional[dict]
     reassemble to full size and re-place under the CURRENT shardings."""
     if shards < 1:
         raise ValueError(f"shards must be >= 1, got {shards}")
+    tracer = obs.default_tracer()
+    t_start = tracer.now()
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     tmp = directory / f"step_{step:09d}.tmp"
@@ -86,6 +97,14 @@ def save_checkpoint(directory, step: int, state, *, metadata: Optional[dict]
         shutil.rmtree(final)
     tmp.rename(final)            # atomic on the same filesystem
     marker.touch()               # commit marker written last
+    _OBS_SAVES.inc()
+    tracer.add_span(
+        "checkpoint_save", t_start, tracer.now(), cat="checkpoint",
+        args={"step": int(step), "leaves": len(manifest["leaves"]),
+              "shards": n_files,
+              "bytes": int(sum(int(np.prod(e["shape"] or [1]))
+                               * np.dtype(e["dtype"]).itemsize
+                               for e in manifest["leaves"]))})
     return final
 
 
@@ -126,6 +145,8 @@ def restore_checkpoint(directory, state_like, *, step: Optional[int] = None,
     on load — the saved arrays are full-size so a different mesh/device
     count works (elastic restart).  Returns (state, step, metadata).
     """
+    tracer = obs.default_tracer()
+    t_start = tracer.now()
     directory = pathlib.Path(directory)
     if step is None:
         step = latest_step(directory)
@@ -165,6 +186,11 @@ def restore_checkpoint(directory, state_like, *, step: Optional[int] = None,
         else:
             new_leaves.append(jax.numpy.asarray(arr))
     treedef = jax.tree.structure(state_like)
+    _OBS_RESTORES.inc()
+    tracer.add_span(
+        "checkpoint_restore", t_start, tracer.now(), cat="checkpoint",
+        args={"step": int(step), "leaves": len(manifest["leaves"]),
+              "shards": num_files})
     return (jax.tree.unflatten(treedef, new_leaves), step,
             manifest.get("metadata", {}))
 

@@ -34,8 +34,9 @@ from __future__ import annotations
 
 import enum
 import functools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Deque, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -110,6 +111,16 @@ class RefitController:
         default_factory=lambda: {a.value: 0 for a in Action})
     extends_since_refit: int = 0
     _floor: Action = Action.REUSE
+    #: queryable decision log (DESIGN.md §15): one entry per recorded
+    #: tick — action, drift before/after, budget + floor state AFTER the
+    #: tick.  Bounded and in-memory only (deliberately NOT in
+    #: ``state_dict``: the timeline is run telemetry, not controller
+    #: state — restoring it would make checkpoint round-trips lossy in
+    #: one direction); each entry mirrors to the obs tracer as a
+    #: ``refit_decision`` event
+    timeline: Deque[dict] = field(
+        default_factory=lambda: deque(maxlen=512), repr=False,
+        compare=False)
 
     def decide(self, drift, can_refresh: bool = True) -> Action:
         """Map the worst per-graph drift to an action (pure — counters
@@ -142,12 +153,15 @@ class RefitController:
             act = Action.REFIT
         return act
 
-    def record(self, action: Action, post_drift=0.0):
+    def record(self, action: Action, post_drift=0.0, drift=None):
         """Account an executed action and its post-action drift (which
         arms or clears the hysteresis floor).  A REUSE tick re-examines
         an armed floor too: drift that has decayed below the floor's
         re-arm point clears it, so quiescence restores the cheap-action
-        ladder instead of leaving the next mild trigger to escalate."""
+        ladder instead of leaving the next mild trigger to escalate.
+
+        ``drift`` is the optional PRE-action score the decision was made
+        from; it only feeds the timeline/trace entry."""
         self.counts[action.value] += 1
         if action is Action.REFIT:
             self.extends_since_refit = 0
@@ -155,10 +169,25 @@ class RefitController:
             self.extends_since_refit += 1
         d = float(np.max(post_drift)) if np.size(post_drift) else 0.0
         level = self._floor if action is Action.REUSE else action
-        if level is Action.REUSE:
-            return
-        armed = d >= self.policy.hysteresis * self.policy.threshold(level)
-        self._floor = level if armed else Action.REUSE
+        if level is not Action.REUSE:
+            armed = d >= (self.policy.hysteresis
+                          * self.policy.threshold(level))
+            self._floor = level if armed else Action.REUSE
+        self._log_decision(action, drift, d)
+
+    def _log_decision(self, action: Action, drift, post: float):
+        from repro import obs
+        entry = {"action": action.value,
+                 "drift": (None if drift is None
+                           else float(np.max(drift)) if np.size(drift)
+                           else 0.0),
+                 "post_drift": post,
+                 "extends_since_refit": int(self.extends_since_refit),
+                 "max_extends": int(self.policy.max_extends),
+                 "floor": self._floor.value}
+        self.timeline.append(entry)
+        obs.default_tracer().event("refit_decision", cat="maintain",
+                                   args=entry)
 
     def state_dict(self) -> dict:
         """JSON-able controller state for checkpoint metadata."""

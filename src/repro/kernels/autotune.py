@@ -48,8 +48,13 @@ from typing import Optional, Sequence
 
 import jax
 
+from repro import obs
+
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 CACHE_VERSION = 1
+
+_OBS_AUTOTUNE = obs.counter("autotune_measurements_total",
+                            "measured tile-size autotune passes")
 BLOCK_B_CANDIDATES = (32, 64, 128, 256)
 CHUNK_CANDIDATES = (1, 2, 4, 8)
 
@@ -181,12 +186,20 @@ def autotune_block_b(plan, args: tuple,
     grid = sorted({min(int(c), max(_pow2_floor(rows), 1))
                    for c in candidates})
     timings = {}
+    tracer = obs.default_tracer()
+    t_start = tracer.now()
     for cand in grid:
         prog = dataclasses.replace(plan, block_b=cand).program()
         timings[str(cand)] = _median_time(prog, args, repeats=repeats)
     best = int(min(timings, key=timings.get))
+    timings_us = {k: round(v * 1e6, 2) for k, v in timings.items()}
     record(plan_key(plan), path=path, source="measured", block_b=best,
-           timings_us={k: round(v * 1e6, 2) for k, v in timings.items()})
+           timings_us=timings_us)
+    _OBS_AUTOTUNE.inc()
+    tracer.add_span("autotune_measure", t_start, tracer.now(),
+                    cat="autotune",
+                    args={"key": plan_key(plan), "block_b": best,
+                          "timings_us": timings_us})
     return best
 
 

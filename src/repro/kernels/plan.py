@@ -51,6 +51,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.staging import (StagedG, StagedT, TABLE_PRECISIONS,
                                 pad_batch, table_arrays, with_precision)
 from repro.runtime.sharding import BucketPlacement
@@ -192,7 +193,18 @@ class ApplyPlan:
         """The plan's compiled program — ONE process-wide cache entry
         per plan (two equal plans return the identical program object,
         so a hot swap with unchanged table shapes recompiles nothing)."""
-        return _compile(self)
+        before = _compile.cache_info().misses
+        prog = _compile(self)
+        # the miss counter increments inside _compile (the only place a
+        # compile actually happens); a lookup that left `misses`
+        # untouched was a hit
+        if _compile.cache_info().misses == before:
+            _PLAN_HITS.inc(**self._obs_labels())
+        return prog
+
+    def _obs_labels(self) -> dict:
+        return {"family": self.family, "mode": self.mode,
+                "backend": self.backend, "n": self.n}
 
     def table_op(self):
         """The plan's computation over raw table tuples, UNJITTED — for
@@ -351,14 +363,36 @@ class ApplyPlan:
         return three_pass_bank
 
 
+#: per-plan cache telemetry (DESIGN.md §15): misses increment INSIDE
+#: the lru-cached ``_compile`` body — the only code path where a staged
+#: program is actually built — so the compile-event count in the trace
+#: equals the plan-cache miss delta by construction (fig15 gates the
+#: equality exactly)
+_PLAN_HITS = obs.counter(
+    "plan_cache_hits_total",
+    "plan-cache lookups served by an already-compiled program",
+    ("family", "mode", "backend", "n"))
+_PLAN_MISSES = obs.counter(
+    "plan_cache_misses_total",
+    "staged-program compilations (plan-cache misses)",
+    ("family", "mode", "backend", "n"))
+
+
 @functools.lru_cache(maxsize=None)
 def _compile(plan: ApplyPlan):
     """THE plan cache: every tier/bank/drift/core program in the process
     lives here, keyed by its plan (one cache, one eviction story —
     ``clear_plan_cache`` drops all compiled programs at once)."""
-    if plan.mode != "apply" and not plan.fused:
-        return plan._three_pass()
-    return jax.jit(plan.table_op())
+    labels = plan._obs_labels()
+    _PLAN_MISSES.inc(**labels)
+    with obs.default_tracer().span(
+            "plan_compile", cat="compile",
+            args={**labels, "fused": plan.fused,
+                  "num_stages": plan.num_stages,
+                  "precision": plan.precision}):
+        if plan.mode != "apply" and not plan.fused:
+            return plan._three_pass()
+        return jax.jit(plan.table_op())
 
 
 @functools.lru_cache(maxsize=None)
@@ -376,6 +410,17 @@ def _scale_program(batched: bool):
 def plan_cache_size() -> int:
     """Number of compiled plan programs resident in the process."""
     return int(_compile.cache_info().currsize)
+
+
+def plan_cache_stats() -> dict:
+    """Hit/miss/size counters of THE plan cache — the structural facts
+    the fig7/fig13/fig14 compile-count gates assert.  ``clear_plan_cache``
+    resets all three to zero (functools semantics), so gates bracket a
+    region with ``clear_plan_cache(); ...; plan_cache_stats()`` and read
+    deltas from a clean origin."""
+    info = _compile.cache_info()
+    return {"hits": int(info.hits), "misses": int(info.misses),
+            "currsize": int(info.currsize)}
 
 
 def clear_plan_cache() -> None:

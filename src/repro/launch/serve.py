@@ -57,11 +57,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as tfm
 
 DEFAULT_TIERS = {"full": 1.0, "balanced": 0.5, "draft": 0.25}
+
+# -- serving-engine telemetry (DESIGN.md §15) -------------------------------
+_OBS_SWAPS = obs.counter("serve_swaps_total",
+                         "versioned hot swaps installed (version > 0)",
+                         ("family",))
+_OBS_VERSION = obs.gauge("serve_version", "live serving version",
+                         ("family",))
+_OBS_STEPS = obs.counter("serve_steps_total", "engine steps served",
+                         ("tier",))
+_OBS_DRIFT = obs.gauge("serve_drift_score",
+                       "per-graph drift score after the last maintain "
+                       "tick", ("graph",))
+_OBS_MAINTAIN = obs.counter("maintain_actions_total",
+                            "maintenance controller decisions",
+                            ("action",))
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +240,13 @@ def parse_args(argv=None):
     ap.add_argument("--maintain-interval", type=float, default=0.05,
                     help="background maintenance period in seconds "
                          "(--serve-async --dynamic)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run's "
+                         "spans/events to PATH on exit (loads in "
+                         "chrome://tracing and Perfetto; DESIGN.md §15)")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="write metrics.json + metrics.prom snapshots "
+                         "of the obs registry into DIR on exit")
     args = ap.parse_args(argv)
     if args.filter or args.ragged or args.dynamic or args.serve_async:
         args.fgft = True
@@ -530,6 +553,14 @@ class FGFTServeEngine:
             basis=basis, fwd=fwd_t, bwd=bwd_t, tiers=tiers,
             fns=fns, bank=bank, bank_gains=bank_gains, bank_fn=bank_fn,
             version=version)
+        _OBS_VERSION.set(version, family=basis.kind)
+        if version > 0:
+            _OBS_SWAPS.inc(family=basis.kind)
+        obs.default_tracer().event(
+            "serve_swap", cat="serve",
+            args={"version": version, "family": basis.kind,
+                  "num_stages": full_stages,
+                  "tiers": sorted(tiers)})
         # default tier = highest quality in the map, whatever its name
         self.default_tier = max(
             tiers, key=lambda k: tiers[k]["num_transforms"])
@@ -569,6 +600,7 @@ class FGFTServeEngine:
             # gains would leak pad columns of x into the output
             d = jnp.where(self._pad_valid, d, 0.0)
         self.stats["steps"][tier] += 1
+        _OBS_STEPS.inc(tier=tier)
         if self.placement is not None:
             # callers hand true-B blocks; pad rows are zero signals on
             # identity pad tables, so the padded rows compute zeros that
@@ -606,6 +638,7 @@ class FGFTServeEngine:
         live = self._live
         if live.bank is None:
             raise ValueError("engine was built without --filter responses")
+        _OBS_STEPS.inc(tier="bank")
         if self.placement is not None:
             y = live.bank_fn(live.fwd, live.bwd, live.bank_gains,
                              self.placement.place(signals))
@@ -680,8 +713,10 @@ class FGFTServeEngine:
         from repro.dynamic.refit import Action
         if not self._dirty.any():
             zero = np.zeros_like(self._baseline)
-            self.controller.record(Action.REUSE, zero)  # idle tick counts
+            self.controller.record(Action.REUSE, zero,  # idle tick counts
+                                   drift=zero)
             self._refresh_dynamic_stats(zero)
+            self._obs_maintain(Action.REUSE.value, zero, zero)
             return {"action": Action.REUSE.value, "drift": zero,
                     "post_drift": zero,
                     "versions": self.versions.copy(),
@@ -705,11 +740,28 @@ class FGFTServeEngine:
             post = self.drift()
             self._last_drift = post
             self._scored_rev = self._update_rev
-        self.controller.record(action, post)
+        self.controller.record(action, post, drift=drift)
         self._refresh_dynamic_stats(post)
+        self._obs_maintain(action.value, drift, post)
         return {"action": action.value, "drift": drift,
                 "post_drift": post, "versions": self.versions.copy(),
                 "swap_version": self._live.version}
+
+    def _obs_maintain(self, action: str, drift, post):
+        """Record one maintain decision in the obs layer: the action
+        counter, per-graph drift gauges (post-action scores), and one
+        queryable trace event mirroring the controller's timeline entry
+        (dynamic/refit.py)."""
+        _OBS_MAINTAIN.inc(action=action)
+        post = np.atleast_1d(np.asarray(post, np.float64))
+        for gid, d in enumerate(post):
+            _OBS_DRIFT.set(float(d), graph=gid)
+        obs.default_tracer().event(
+            "maintain", cat="maintain",
+            args={"action": action,
+                  "drift_max": float(np.max(np.atleast_1d(drift))),
+                  "post_drift_max": float(np.max(post)),
+                  "swap_version": self._live.version})
 
     def _execute(self, action):
         """Run one refit action through its cached compiled program and
@@ -1620,8 +1672,27 @@ class ServeEngine:
         return np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
 
 
+def _export_obs(args):
+    """--trace / --metrics-dir artifact export: runs on EVERY exit path
+    (main wraps the drivers in try/finally) so a failed run still leaves
+    its telemetry behind — exactly when the trace is most interesting."""
+    if getattr(args, "trace", None):
+        path = obs.export_trace(args.trace)
+        print(f"[obs] chrome trace -> {path}")
+    if getattr(args, "metrics_dir", None):
+        out = obs.export_metrics(args.metrics_dir)
+        print(f"[obs] metrics -> {out['json']} + {out['prom']}")
+
+
 def main(argv=None):
     args = parse_args(argv)
+    try:
+        return _serve_main(args)
+    finally:
+        _export_obs(args)
+
+
+def _serve_main(args):
     if args.fgft:
         return serve_fgft(args)
     cfg = get_config(args.arch, smoke=args.smoke)

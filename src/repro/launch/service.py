@@ -55,7 +55,31 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+from repro.obs.metrics import (bucket_counts, geometric_edges,
+                               merge_histograms)  # noqa: F401 — merge_histograms re-exported; histogram() below builds on the same ladder
+
 BANK = "__bank__"          # pseudo-tier routing a request to the filter bank
+
+# -- serving-path telemetry (DESIGN.md §15): every live service records
+# into the process-wide registry; per-service isolation comes from the
+# `service` label ------------------------------------------------------
+_OBS_SUBMITTED = obs.counter("service_requests_total",
+                             "requests admitted to the bounded queue",
+                             ("service", "tier"))
+_OBS_SHED = obs.counter("service_shed_total",
+                        "requests rejected by admission control",
+                        ("service",))
+_OBS_DISPATCHES = obs.counter("service_dispatches_total",
+                              "coalesced fused dispatches",
+                              ("service", "tier"))
+_OBS_QUEUE_DEPTH = obs.gauge("service_queue_depth",
+                             "queue depth sampled at the last dispatch",
+                             ("service",))
+_OBS_STAGE_S = obs.histogram(
+    "service_stage_seconds",
+    "per-request stage latency on the obs geometric ladder",
+    ("service", "tier", "stage"))
 
 # every live service registers here so a test harness (tests/conftest.py's
 # thread-leak guard) can force-stop leaked services instead of hanging the
@@ -168,26 +192,22 @@ class LatencyRecorder:
         return xs[rank - 1]
 
     def histogram(self, key: str, origin: float = 1e-4,
-                  base: float = 2.0) -> List[dict]:
+                  base: float = 2.0,
+                  bucket_count: int = 26) -> List[dict]:
         """Geometric-bucket histogram of the retained samples:
-        ``[{"le_s": bound, "count": k}, ...]`` with a final +inf bucket.
-        Bucket edges are origin·base^i — fixed, data-independent edges so
-        histograms from different runs/processes merge by position."""
+        ``[{"le_s": bound, "count": k}, ...]`` over the obs bounded
+        geometric ladder (``obs.metrics.geometric_edges``): a 0-bucket,
+        ``bucket_count`` edges origin·base^i, and a final +inf bucket.
+        The edge list is a function of the PARAMETERS only — length
+        ``bucket_count + 2`` no matter what was recorded — so
+        histograms from different runs/processes merge by position
+        (``merge_histograms``).  The pre-obs version grew the ladder to
+        the max retained sample, which silently broke exactly that
+        merge."""
         with self._lock:
             xs = list(self._samples.get(key, ()))
-        edges = [0.0]
-        hi = max(xs, default=0.0)
-        e = origin
-        while e <= hi:
-            edges.append(e)
-            e *= base
-        edges.append(float("inf"))
-        counts = [0] * (len(edges))
-        for s in xs:
-            for i, le in enumerate(edges):
-                if s <= le:
-                    counts[i] += 1
-                    break
+        edges = geometric_edges(origin, base, bucket_count)
+        counts = bucket_counts(edges, xs)
         return [{"le_s": le, "count": c} for le, c in zip(edges, counts)]
 
     def summary(self) -> Dict[str, dict]:
@@ -220,6 +240,12 @@ class ServeResult:
     service_s: float
     total_s: float
     batch_size: int
+    #: the obs trace id stamped at submit and threaded queue ->
+    #: coalesce -> dispatch -> reply: ``default_tracer().spans(
+    #: trace_id=r.trace_id)`` returns exactly this request's
+    #: queue/batch/execute/request spans, and their durations telescope
+    #: to ``total_s`` exactly under a fake clock (DESIGN.md §15)
+    trace_id: int = 0
 
 
 @dataclass
@@ -230,6 +256,7 @@ class _Request:
     group: Tuple[Any, str]        # (bucket key, tier): the coalescing key
     future: Future = field(default_factory=Future)
     t_submit: float = 0.0
+    trace_id: int = 0
 
 
 @dataclass(frozen=True)
@@ -300,6 +327,14 @@ class AsyncFGFTService:
         self._clock = clock
         self._routes = _build_routes(engine)
         self.latency = LatencyRecorder(max_samples=latency_window)
+        # hot-path obs handles: label children resolved ONCE here —
+        # per-request label kwargs would cost more than the recording
+        # itself (the fig15 traced-vs-untraced QPS gate)
+        self._obs_shed = _OBS_SHED.labels(service=self.name)
+        self._obs_depth = _OBS_QUEUE_DEPTH.labels(service=self.name)
+        self._obs_submitted: Dict[str, Any] = {}
+        self._obs_dispatch: Dict[str, Any] = {}
+        self._obs_stage: Dict[str, dict] = {}
         # one lock guards the queue and every counter; it is NEVER held
         # across an engine dispatch (jitted calls run lock-free — the
         # engine's atomic _LiveVersion read is the only synchronization
@@ -404,7 +439,8 @@ class AsyncFGFTService:
             raise ValueError(f"unknown tier {tier!r}; engine serves "
                              f"{sorted(route.engine._live.tiers)}")
         req = _Request(graph_id=graph_id, signal=x, tier=tier,
-                       group=(route.bucket, tier))
+                       group=(route.bucket, tier),
+                       trace_id=obs.new_trace_id())
         req.t_submit = self._clock()
         with self._cond:
             if self._closed:
@@ -412,11 +448,18 @@ class AsyncFGFTService:
             depth = len(self._queue)
             if depth >= self.max_queue:
                 self._shed += 1
+                self._obs_shed.inc()
                 raise ShedError(depth, self.max_queue, graph_id)
             self._queue.append(req)
             self._submitted += 1
             self._depth_peak = max(self._depth_peak, depth + 1)
             self._cond.notify()
+        label = "bank" if tier == BANK else tier
+        child = self._obs_submitted.get(label)
+        if child is None:
+            child = self._obs_submitted[label] = _OBS_SUBMITTED.labels(
+                service=self.name, tier=label)
+        child.inc()
         return req.future
 
     # -- coalescing dispatcher ---------------------------------------------
@@ -446,7 +489,8 @@ class AsyncFGFTService:
             if not self._queue:
                 return 0
             batch = self._collect_locked()
-        self._run_batch(batch)
+        t_collect = self._clock()
+        self._run_batch(batch, t_collect)
         return len(batch)
 
     def _dispatch_loop(self):
@@ -457,10 +501,26 @@ class AsyncFGFTService:
                 if not self._queue:
                     return                      # closed and drained
                 batch = self._collect_locked()
-            self._run_batch(batch)
+            t_collect = self._clock()
+            self._run_batch(batch, t_collect)
 
-    def _run_batch(self, batch: List[_Request]):
+    def _stage_children(self, label: str) -> dict:
+        """Per-(tier, stage) bound histogram children, resolved once per
+        tier label (benign if two threads race the first resolution —
+        both children share one series key)."""
+        cached = self._obs_stage.get(label)
+        if cached is None:
+            cached = self._obs_stage[label] = {
+                stage: _OBS_STAGE_S.labels(service=self.name, tier=label,
+                                           stage=stage)
+                for stage in ("queue", "batch", "execute", "total")}
+        return cached
+
+    def _run_batch(self, batch: List[_Request],
+                   t_collect: Optional[float] = None):
         t0 = self._clock()
+        if t_collect is None:
+            t_collect = t0
         try:
             results = self._fused_dispatch(batch)
         except Exception as exc:  # noqa: BLE001 — fail the batch, not the service
@@ -477,15 +537,58 @@ class AsyncFGFTService:
             self._coalesced += len(batch)
             self._occ_max = max(self._occ_max, len(batch))
             self._served += len(batch)
+            depth_now = len(self._queue)
+        tracer = obs.default_tracer()
+        if obs.recording_enabled():
+            # every registry touch here is per BATCH, not per request:
+            # batch-wait and execute are batch-uniform (one locked
+            # count += len(batch)), and the per-request queue/total
+            # samples go through one locked bucketing pass each — the
+            # per-request lock round trips were the measurable cost the
+            # fig15 QPS gate caught
+            dchild = self._obs_dispatch.get(label)
+            if dchild is None:
+                dchild = self._obs_dispatch[label] = \
+                    _OBS_DISPATCHES.labels(service=self.name, tier=label)
+            dchild.inc()
+            self._obs_depth.set(depth_now)
+            stage_obs = self._stage_children(label)
+            stage_obs["batch"].observe_many(t0 - t_collect, len(batch))
+            stage_obs["execute"].observe_many(t1 - t0, len(batch))
+            stage_obs["queue"].observe_seq(
+                [t_collect - req.t_submit for req in batch])
+            stage_obs["total"].observe_seq(
+                [t1 - req.t_submit for req in batch])
+        tid = threading.get_ident()
         for req, (y, version) in zip(batch, results):
             queue_s = t0 - req.t_submit
             self.latency.record(f"{label}/queue", queue_s)
             self.latency.record(f"{label}/service", t1 - t0)
             self.latency.record(f"{label}/total", t1 - req.t_submit)
+            if tracer.enabled:
+                # the four spans share their endpoints (t_submit <=
+                # t_collect <= t0 <= t1, all read from THIS service's
+                # injectable clock), so queue + batch + execute
+                # telescopes to the request span exactly — integer
+                # fake-clock times make the float sums exact, which
+                # fig15 gates with ==.  Only the parent request span
+                # carries args; the sub-spans are linked by trace_id.
+                tr = req.trace_id
+                tracer.add_spans((
+                    ("request/queue", req.t_submit, t_collect,
+                     "serve", tr, tid, None),
+                    ("request/batch", t_collect, t0,
+                     "serve", tr, tid, None),
+                    ("request/execute", t0, t1,
+                     "serve", tr, tid, None),
+                    ("request", req.t_submit, t1, "serve", tr, tid,
+                     {"graph": req.graph_id, "tier": label,
+                      "version": version, "batch_size": len(batch)})))
             req.future.set_result(ServeResult(
                 y=y, graph_id=req.graph_id, tier=label, version=version,
                 queue_s=queue_s, service_s=t1 - t0,
-                total_s=t1 - req.t_submit, batch_size=len(batch)))
+                total_s=t1 - req.t_submit, batch_size=len(batch),
+                trace_id=req.trace_id))
 
     def _fused_dispatch(self, batch: List[_Request]):
         """ONE fused engine dispatch answering every request in ``batch``
@@ -657,6 +760,11 @@ class AsyncFGFTService:
                     else {"device_ids": list(fp.device_ids),
                           "batch": int(fp.batch)})
         snap["latency"] = self.latency.summary()
+        # the obs layer rides along: counters/gauges/histograms of the
+        # process-wide registry (DESIGN.md §15), persisted with the slo
+        # payload by save() below so a checkpoint carries the full
+        # telemetry of the run that wrote it
+        snap["obs"] = obs.default_registry().collect()
         return snap
 
     def save(self, directory, step: int = 0):
@@ -768,22 +876,9 @@ def open_loop_load(service: AsyncFGFTService, requests: List[tuple],
 
 
 def _print_slo(stats: dict):
-    occ = stats["batch"]
-    print(f"[svc] served {stats['served']}/{stats['submitted']} "
-          f"(shed {stats['shed']}, errors {stats['errors']}), "
-          f"{stats['dispatches']} fused dispatches, occupancy "
-          f"{occ['occupancy_mean']:.2f}/{occ['cap']} "
-          f"(max {occ['occupancy_max']}), queue peak "
-          f"{stats['queue']['peak']}/{stats['queue']['max']}, "
-          f"maintenance ticks {stats['maintain']['ticks']} "
-          f"(swaps {stats['maintain']['swaps']}, errors "
-          f"{stats['maintain']['errors']})")
-    for key, s in stats["latency"].items():
-        if not key.endswith("/total"):
-            continue
-        print(f"[svc]   {key.split('/')[0]:>10}: p50 "
-              f"{s['p50_s'] * 1e3:.2f}ms  p99 {s['p99_s'] * 1e3:.2f}ms  "
-              f"max {s['max_s'] * 1e3:.2f}ms  ({s['count']} reqs)")
+    """ONE formatting path for stats output: the obs text reporter
+    (obs/report.py) renders the snapshot; drivers only print it."""
+    print(obs.format_slo(stats))
 
 
 def serve_fgft_async(args) -> dict:

@@ -105,10 +105,33 @@ def test_recorder_histogram_buckets():
     assert sum(b["count"] for b in hist) == 4
     assert hist[0] == {"le_s": 0.0, "count": 1}           # the exact zero
     assert hist[-1]["le_s"] == float("inf")
-    assert hist[-1]["count"] == 1                         # the 1.0 outlier
+    # the bounded ladder reaches past 1.0, so a 1s sample lands in a
+    # FINITE bucket (the pre-obs recorder dumped it into +inf because
+    # its edge list stopped at the max retained sample)
+    assert hist[-1]["count"] == 0
     # geometric edges are data-independent: origin * base^i
     assert hist[1]["le_s"] == pytest.approx(1e-4)
     assert hist[2]["le_s"] == pytest.approx(2e-4)
+
+
+def test_recorder_histogram_fixed_length_merges_by_position():
+    # the whole point of the bounded ladder: the edge list is a function
+    # of (origin, base, bucket_count) only, NEVER of the data, so two
+    # recorders with wildly different sample ranges merge positionally
+    from repro.launch.service import merge_histograms
+    a, b = LatencyRecorder(), LatencyRecorder()
+    a.record("t", 2e-4)                     # sub-millisecond run ...
+    b.record("t", 3.0)                      # ... vs a multi-second run
+    b.record("t", 7.0)
+    ha, hb = a.histogram("t"), b.histogram("t")
+    assert len(ha) == len(hb) == 28         # bucket_count + {0, +inf}
+    assert [x["le_s"] for x in ha] == [x["le_s"] for x in hb]
+    merged = merge_histograms(ha, hb)
+    assert sum(x["count"] for x in merged) == 3
+    assert [x["le_s"] for x in merged] == [x["le_s"] for x in ha]
+    # mismatched ladders are a hard error, not silent corruption
+    with pytest.raises(ValueError):
+        merge_histograms(ha, a.histogram("t", bucket_count=8))
 
 
 def test_recorder_validation():
@@ -191,15 +214,16 @@ def test_queue_latency_is_exact(sym_engine):
 
 
 def test_ticking_clock_splits_queue_and_service(sym_engine):
-    # every clock read advances 1s: t_submit=0, t0=1, t1=2
+    # every clock read advances 1s: t_submit=0, t_collect=1 (the span
+    # between popping the queue and starting the dispatch), t0=2, t1=3
     svc = AsyncFGFTService(sym_engine, clock=FakeClock(step=1.0),
                            auto_start=False)
     fut = svc.submit(0, signals_for(sym_engine, 0, 1, 1))
     svc.drain_once()
     res = fut.result(timeout=0)
-    assert res.queue_s == pytest.approx(1.0)
+    assert res.queue_s == pytest.approx(2.0)
     assert res.service_s == pytest.approx(1.0)
-    assert res.total_s == pytest.approx(2.0)
+    assert res.total_s == pytest.approx(3.0)
 
 
 def test_percentiles_from_scripted_waits(sym_engine):
